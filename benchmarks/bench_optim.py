@@ -1,0 +1,42 @@
+"""Beyond-paper table: QR-Muon vs NS-Muon vs AdamW on a small LM.
+
+The paper's MHT QR as a production optimizer primitive (DESIGN.md §3):
+loss after a fixed budget of steps on the deterministic synthetic stream,
+plus per-step orthogonalization cost.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, SyntheticLM
+from repro.training import TrainConfig, init_train_state, make_train_step
+
+
+def run() -> list:
+    cfg = get_smoke_config("smollm-135m")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                  global_batch=8, seed=3))
+    rows = []
+    for opt, lr in [("muon-qr", 0.02), ("muon-ns", 0.02), ("adamw", 2e-3)]:
+        from repro.models import init_params
+
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        tc = TrainConfig(optimizer=opt, lr=lr)
+        state = init_train_state(params, tc)
+        step = jax.jit(make_train_step(cfg, tc))
+        lr_arr = jnp.float32(lr)
+        # warmup/compile
+        state, metrics = step(state, data.peek(0), lr_arr)
+        jax.block_until_ready(metrics["loss"])
+        t0 = time.perf_counter()
+        losses = []
+        for i in range(1, 16):
+            state, metrics = step(state, data.peek(i), lr_arr)
+            losses.append(float(metrics["loss"]))
+        dt = (time.perf_counter() - t0) / 15 * 1e6
+        rows.append((f"optim_{opt}", dt,
+                     f"loss_step15={losses[-1]:.3f};loss_step1={losses[0]:.3f}"))
+    return rows

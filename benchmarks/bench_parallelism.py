@@ -1,0 +1,25 @@
+"""Paper Fig. 9: theta (parallelism ratio) vs matrix size.
+
+Rebuilds the HT and MHT DAGs symbolically and reports
+  - theta_levels: level ratio under unbounded-width tree reductions,
+  - theta_width4: the paper's 4-wide RDP phase model (saturates ~0.749),
+  - beta gain (equal-ops accounting, eq. 9/10).
+"""
+
+import time
+
+from repro.core.dag import theta_curve
+
+
+def run() -> list:
+    t0 = time.time()
+    rows = theta_curve((4, 8, 16, 32, 64, 128))["rows"]
+    dt = (time.time() - t0) * 1e6 / len(rows)
+    out = []
+    for r in rows:
+        out.append((f"fig9_theta_n{r['n']}", dt,
+                    f"theta_w4={r['theta_width4']:.4f};"
+                    f"gain_w4={r['gain_width4']:.3f};"
+                    f"theta_tree={r['theta_levels']:.4f};"
+                    f"beta_mht={r['beta_mht']:.1f}"))
+    return out

@@ -1,0 +1,56 @@
+"""Paper Fig. 11 / 14(a,b): QR variant performance.
+
+DGEQR2 (classical HT), DGEQR2HT (MHT), DGEQRF (blocked HT), DGEQRFHT
+(blocked MHT), DGEQRFHT+kernels (Pallas panel + WY trailing), and the
+textbook explicit-P classical — wall time and achieved GFLOP/s on the
+host (algorithmic comparison; the TPU story is the §Roofline analysis).
+
+QR FLOPs: 2 m n^2 - (2/3) n^3.
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import geqr2, geqr2_ht, geqrf
+from repro.core.blocked import geqrf_fori
+from repro.core.householder import geqr2_explicit_p
+
+
+def _qr_flops(m, n):
+    return 2.0 * m * n * n - 2.0 / 3.0 * n ** 3
+
+
+def _time(fn, a, iters=3):
+    out = fn(a)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(a)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    variants = [
+        ("DGEQR2", lambda a: geqr2(a)),
+        ("DGEQR2HT", lambda a: geqr2_ht(a)),
+        ("DGEQR2_explicitP", lambda a: geqr2_explicit_p(a)),
+        ("DGEQRF", lambda a: geqrf(a, block=32, panel_method="ht")),
+        ("DGEQRFHT", lambda a: geqrf(a, block=32, panel_method="mht")),
+        ("DGEQRFHT_fori", lambda a: geqrf_fori(a, block=32)),
+    ]
+    for (m, n) in [(256, 256), (512, 256)]:
+        a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        flops = _qr_flops(m, n)
+        for name, fn in variants:
+            if name == "DGEQR2_explicitP" and m > 256:
+                continue  # O(m^2 n) per column — skip the big case
+            dt = _time(fn, a)
+            rows.append((f"fig11_{name}_{m}x{n}", dt * 1e6,
+                         f"gflops={flops / dt / 1e9:.2f}"))
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.  The dry-run/roofline
+results (launch/dryrun.py + launch/roofline.py) are the TPU-side
+counterpart; these benches cover the paper's algorithmic claims on the
+host.
+"""
+
+import argparse
+import sys
+import traceback
+
+_MODULES = [
+    ("fig9_parallelism", "benchmarks.bench_parallelism"),
+    ("fig11_qr_variants", "benchmarks.bench_qr_variants"),
+    ("fig13_kernel_traffic", "benchmarks.bench_kernel_traffic"),
+    ("fig14e_scaling", "benchmarks.bench_scaling"),
+    ("optim_beyond_paper", "benchmarks.bench_optim"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated prefixes to run")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, modname in _MODULES:
+        if only and not any(label.startswith(o) for o in only):
+            continue
+        try:
+            import importlib
+
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{label},ERROR,{traceback.format_exc().splitlines()[-1]}",
+                  file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Atomic/async checkpointing with reshard-on-restore."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,23 @@
+"""repro.core — Householder/MHT QR factorization (the paper's contribution).
+
+Layers:
+    householder  classical HT (DGEQR2 semantics), Q application/formation
+    mht          Modified Householder Transform (fused macro-op updates)
+    blocked      WY-blocked QR (DGEQRF / DGEQRFHT)
+    tsqr         communication-avoiding distributed QR over mesh axes
+    dag          beta/theta parallelism quantification (paper fig 9)
+    api          qr() / orthogonalize() / lstsq() / qr_algorithm_eig()
+"""
+
+from repro.core.api import lstsq, orthogonalize, qr, qr_algorithm_eig
+from repro.core.blocked import geqrf, larft
+from repro.core.householder import apply_q, form_q, geqr2, house_vector, unpack_r, unpack_v
+from repro.core.mht import geqr2_ht, mht_update
+from repro.core.tsqr import distributed_qr, tsqr_qr, tsqr_r, tsqr_tree_sharded
+
+__all__ = [
+    "qr", "orthogonalize", "lstsq", "qr_algorithm_eig",
+    "geqr2", "geqr2_ht", "geqrf", "larft",
+    "house_vector", "apply_q", "form_q", "unpack_r", "unpack_v", "mht_update",
+    "tsqr_r", "tsqr_qr", "tsqr_tree_sharded", "distributed_qr",
+]

@@ -1,0 +1,134 @@
+"""Public QR API — the paper's contribution as a composable JAX module.
+
+    qr(a, method=...)          -> (Q, R)  or R
+    orthogonalize(m)           -> sign-fixed thin Q (optimizer primitive)
+    lstsq(a, b)                -> QR-based least-squares solve
+    qr_algorithm_eig(a, iters) -> eigenvalues via the QR algorithm (paper §1 App. 2)
+
+Methods:
+    "geqr2"      classical HT, two-pass updates          (LAPACK_DGEQR2)
+    "geqr2_ht"   MHT, fused macro-op updates             (LAPACK_DGEQR2HT)
+    "geqrf"      blocked WY, classical HT panels         (LAPACK_DGEQRF)
+    "geqrf_ht"   blocked WY, MHT panels [default]        (LAPACK_DGEQRFHT)
+    "tsqr"       tall-skinny tree QR (single device)
+Kernel-backed variants run the Pallas mht_panel / wy_trailing kernels
+(``use_kernel=True``; interpret-mode on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocked, householder, mht, tsqr as tsqr_mod
+
+Array = jax.Array
+
+__all__ = ["qr", "orthogonalize", "lstsq", "qr_algorithm_eig", "METHODS"]
+
+METHODS = ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr")
+
+
+def _factor(a: Array, method: str, block: int, use_kernel: bool):
+    if method == "geqr2":
+        return householder.geqr2(a)
+    if method == "geqr2_ht":
+        if use_kernel:
+            from repro.kernels import ops
+
+            return ops.mht_panel(a, row0=0)
+        return mht.geqr2_ht(a)
+    if method == "geqrf":
+        return blocked.geqrf(a, block=block, panel_method="ht", use_kernel=False)
+    if method == "geqrf_ht":
+        return blocked.geqrf(a, block=block, panel_method="mht", use_kernel=use_kernel)
+    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+
+
+def qr(
+    a: Array,
+    *,
+    method: str = "geqrf_ht",
+    mode: str = "reduced",
+    block: int = 32,
+    use_kernel: bool = False,
+) -> Tuple[Array, Array] | Array:
+    """QR factorization with selectable HT/MHT realization.
+
+    mode: "reduced" -> (Q thin m x k, R k x n); "r" -> R only;
+          "full" -> (Q m x m, R m x n).
+    """
+    if a.ndim != 2:
+        raise ValueError(f"qr expects a matrix, got shape {a.shape}")
+    m, n = a.shape
+    k = min(m, n)
+
+    if method == "tsqr":
+        if m < 4 * n:
+            raise ValueError("tsqr expects tall-skinny input (m >= 4n)")
+        nb = max(2, min(8, m // max(n, 1)))
+        while m % nb != 0:
+            nb -= 1
+        if mode == "r":
+            return tsqr_mod.tsqr_r(a, nblocks=nb)
+        q, r = tsqr_mod.tsqr_qr(a, nblocks=nb)
+        if mode == "full":
+            raise ValueError("tsqr produces thin Q only")
+        return q, r
+
+    packed, taus = _factor(a, method, block, use_kernel)
+    r = householder.unpack_r(packed, n)
+    if mode == "r":
+        return r
+    if mode == "reduced":
+        q = householder.form_q(packed, taus)  # (m, k)
+        return q, r
+    if mode == "full":
+        q = householder.form_q(packed, taus, full=True)
+        return q, jnp.vstack([r, jnp.zeros((m - k, n), a.dtype)]) if m > k else (q, r)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def orthogonalize(m_in: Array, *, method: str = "geqrf_ht", block: int = 32,
+                  use_kernel: bool = False) -> Array:
+    """Nearest-column-space orthonormal factor via QR with sign fixing.
+
+    Returns Q * diag(sign(diag(R))) so the result is a deterministic,
+    continuous function of the input (the optimizer primitive; wide
+    matrices are handled by factorizing the transpose)."""
+    transpose = m_in.shape[0] < m_in.shape[1]
+    a = m_in.T if transpose else m_in
+    q, r = qr(a, method=method, mode="reduced", block=block, use_kernel=use_kernel)
+    signs = jnp.where(jnp.diagonal(r) >= 0, 1.0, -1.0).astype(q.dtype)
+    q = q * signs[None, :]
+    return q.T if transpose else q
+
+
+def lstsq(a: Array, b: Array, *, method: str = "geqrf_ht", block: int = 32) -> Array:
+    """Least-squares solve ``min ||a x - b||`` via QR (m >= n).
+
+    x = R^{-1} Q^T b — the numerically stable path the paper motivates for
+    Kalman filtering (§1, Application 1)."""
+    m, n = a.shape
+    if m < n:
+        raise ValueError("lstsq expects m >= n")
+    packed, taus = _factor(a, method, block, use_kernel=False)
+    qtb = householder.apply_q(packed, taus, b if b.ndim == 2 else b[:, None],
+                              transpose=True)
+    r = householder.unpack_r(packed, n)[:n, :n]
+    x = jax.scipy.linalg.solve_triangular(r, qtb[:n], lower=False)
+    return x[:, 0] if b.ndim == 1 else x
+
+
+def qr_algorithm_eig(a: Array, *, iters: int = 200, method: str = "geqrf_ht") -> Array:
+    """Eigenvalues of symmetric ``a`` via the (unshifted) QR algorithm —
+    paper §1 Application 2, Algorithm 1:  A_{k} = R_k Q_k."""
+
+    def body(_, ak):
+        q, r = qr(ak, method=method, mode="reduced")
+        return r @ q
+
+    ak = jax.lax.fori_loop(0, iters, body, a)
+    return jnp.sort(jnp.diagonal(ak))[::-1]

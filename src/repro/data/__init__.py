@@ -1,0 +1,5 @@
+"""Data pipeline substrate (deterministic, shardable, resumable)."""
+
+from repro.data.pipeline import DataConfig, MemmapCorpus, SyntheticLM, make_pipeline
+
+__all__ = ["DataConfig", "SyntheticLM", "MemmapCorpus", "make_pipeline"]

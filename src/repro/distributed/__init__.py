@@ -1,0 +1,20 @@
+"""Distribution substrate: sharding rules, gradient compression,
+fault tolerance."""
+
+from repro.distributed.compression import (
+    compressed_psum, dequantize, ef_compress_tree, init_error_state, quantize,
+)
+from repro.distributed.fault_tolerance import (
+    ElasticPlan, StepWatchdog, plan_elastic_mesh,
+)
+from repro.distributed.sharding import (
+    MeshRules, batch_specs, cache_specs, param_shardings, param_specs,
+    state_specs, tree_shardings,
+)
+
+__all__ = [
+    "MeshRules", "param_specs", "param_shardings", "state_specs",
+    "batch_specs", "cache_specs", "tree_shardings",
+    "quantize", "dequantize", "ef_compress_tree", "compressed_psum",
+    "init_error_state", "StepWatchdog", "plan_elastic_mesh", "ElasticPlan",
+]

@@ -1,0 +1,97 @@
+"""Fault tolerance: step watchdog (straggler mitigation), elastic re-mesh.
+
+Production contract (DESIGN.md §4):
+  * every state mutation in the trainer goes through the atomic async
+    CheckpointManager, so any crash restarts from the last committed step
+    with bitwise-identical data order (Philox-keyed pipeline);
+  * ``StepWatchdog`` tracks a robust step-time median; steps slower than
+    ``threshold x median`` fire the straggler callback (in multi-host
+    deployments: trigger pre-emptive re-shard / hot-spare swap — here it
+    is surfaced to the trainer log and tested with synthetic delays);
+  * ``plan_elastic_mesh`` rebuilds the largest power-of-two (data, model)
+    mesh from the surviving device pool; restore then re-shards the
+    checkpoint onto it (CheckpointManager stores leaves unsharded, so
+    this is just device_put with the new shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["StepWatchdog", "plan_elastic_mesh", "ElasticPlan"]
+
+
+class StepWatchdog:
+    """Detects straggler steps from wall-clock timings."""
+
+    def __init__(self, *, threshold: float = 2.5, window: int = 32,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.threshold = threshold
+        self.window = window
+        self.on_straggler = on_straggler
+        self._times: List[float] = []
+        self._t0: Optional[float] = None
+        self.straggler_steps: List[int] = []
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> float:
+        assert self._t0 is not None, "stop() without start()"
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        if len(self._times) >= 5:
+            med = sorted(self._times)[len(self._times) // 2]
+            if dt > self.threshold * med:
+                self.straggler_steps.append(step)
+                if self.on_straggler:
+                    self.on_straggler(step, dt, med)
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        return dt
+
+    @property
+    def median(self) -> float:
+        if not self._times:
+            return 0.0
+        return sorted(self._times)[len(self._times) // 2]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh: Mesh
+    data_size: int
+    model_size: int
+    dropped_devices: int
+
+
+def _largest_pow2_leq(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def plan_elastic_mesh(devices: Sequence, *, failed: Sequence[int] = (),
+                      prefer_model: int = 16) -> ElasticPlan:
+    """Rebuild the largest power-of-two (data, model) mesh from surviving
+    devices.  ``failed`` lists device ids to exclude (the simulation of a
+    host loss).  Keeps the model axis at ``prefer_model`` when possible
+    (TP degree is fixed by the model's memory footprint), shrinking the
+    data axis — the standard elastic-DP policy."""
+    alive = [d for d in devices if d.id not in set(failed)]
+    if not alive:
+        raise RuntimeError("no devices left")
+    usable = _largest_pow2_leq(len(alive))
+    model = min(prefer_model, usable)
+    data = usable // model
+    mesh_devices = __import__("numpy").array(alive[:usable]).reshape(data, model)
+    mesh = Mesh(mesh_devices, ("data", "model"))
+    return ElasticPlan(mesh=mesh, data_size=data, model_size=model,
+                       dropped_devices=len(devices) - usable)

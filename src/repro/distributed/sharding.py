@@ -1,0 +1,350 @@
+"""Best-effort logical-axis sharding rules for params, state, batches, caches.
+
+Policy (MaxText-style "fsdp + tensor"):
+  * ``model`` axis (16-way TP): output/head/expert/vocab dimension of each
+    weight — the dimension whose partial products stay local until the
+    next reduce;
+  * ``data`` axes (16-way FSDP; ``("pod","data")`` = 32-way on the
+    multi-pod mesh): the contraction (embed/ff) dimension — ZeRO-3-style
+    parameter + optimizer-state sharding, gathered just-in-time by XLA;
+  * batch over the data axes; for batch-1 long-context cells the sequence
+    dimension takes the data axes instead (sequence parallelism).
+
+Every rule degrades to replication (None) when a dimension is not
+divisible by the axis size — heads of 9 or 60 experts never fail to
+compile, they just shard on a different dimension (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshRules", "param_specs", "param_shardings", "state_specs",
+           "batch_specs", "cache_specs", "tree_shardings",
+           "activation_policy", "constrain_hidden", "constrain_logits"]
+
+# weight names whose FIRST dim is the TP (model) dim: projections back to
+# d_model — their contraction dim (ff/heads) is tensor-parallel.
+_DOWN_TYPE = ("down", "wo", "out_proj", "out", "down_w")
+_EXCLUDE_MODEL = ("router", "shared_gate", "qnorm", "knorm")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    # tp_enabled=False: small-model policy — no tensor parallelism, the
+    # model axis joins the batch axes (pure DP/FSDP; kills the TP
+    # all-reduces that dominate sub-4B models on a 16-way model axis).
+    tp_enabled: bool = True
+    batch_axes: Optional[Tuple[str, ...]] = None
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    def data_spec(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def batch_axes_eff(self) -> Tuple[str, ...]:
+        return self.batch_axes if self.batch_axes is not None else self.data_axes
+
+    @property
+    def batch_size_eff(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes_eff]))
+
+    def batch_spec(self):
+        ax = self.batch_axes_eff
+        return ax if len(ax) > 1 else ax[0]
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def _weight_spec(names, shape, rules: MeshRules) -> P:
+    """Spec for an unstacked weight leaf."""
+    ds, ms = rules.data_size, rules.model_size
+    dspec, m = rules.data_spec(), rules.model_axis
+    nd = len(shape)
+
+    if nd == 1:
+        # gains/biases: shard big vectors over data, replicate small ones
+        return P(dspec) if shape[0] >= 4096 and _div(shape[0], ds) else P(None)
+
+    no_model = any(n in _EXCLUDE_MODEL for n in names) or not rules.tp_enabled
+    down_type = any(n in _DOWN_TYPE for n in names)
+
+    if nd == 2:
+        if "table" in names:  # embedding (V, d): vocab-parallel + fsdp
+            return P(m if _div(shape[0], ms) else None,
+                     dspec if _div(shape[1], ds) else None)
+        if "lm_head" in names:  # (d, V): vocab-parallel output
+            return P(dspec if _div(shape[0], ds) else None,
+                     m if _div(shape[1], ms) else None)
+        if down_type:  # (ff/heads, d): TP on contraction, fsdp on output
+            return P(m if _div(shape[0], ms) and not no_model else None,
+                     dspec if _div(shape[1], ds) else None)
+        # up-type (d, ff/heads): fsdp on contraction, TP on output
+        return P(dspec if _div(shape[0], ds) else None,
+                 m if _div(shape[1], ms) and not no_model else None)
+
+    if nd == 3:
+        # expert stacks (E, d, f) / (E, f, d); xLSTM blocks (H, dh, dh/4dh)
+        e = shape[0]
+        no_model3 = no_model
+        if _div(e, ms) and not no_model3:
+            return P(m, dspec if _div(shape[1], ds) else None, None)
+        # experts/heads not divisible: shard the inner matmul dims instead
+        if down_type:
+            return P(None, m if _div(shape[1], ms) and not no_model3 else None,
+                     dspec if _div(shape[2], ds) else None)
+        return P(None, dspec if _div(shape[1], ds) else None,
+                 m if _div(shape[2], ms) and not no_model3 else None)
+
+    return P(*([None] * nd))
+
+
+def param_specs(params: Any, rules: MeshRules) -> Any:
+    """PartitionSpec tree for a param tree (arrays or ShapeDtypeStructs).
+
+    Leaves under ``layers`` carry a leading n_periods stack axis which is
+    never sharded (it is the scan axis)."""
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        shape = tuple(leaf.shape)
+        if "layers" in names and len(shape) >= 1:
+            inner = _weight_spec(names, shape[1:], rules)
+            return P(None, *inner)
+        return _weight_spec(names, shape, rules)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(params: Any, rules: MeshRules) -> Any:
+    return tree_shardings(param_specs(params, rules), rules.mesh)
+
+
+def state_specs(params: Any, param_spec_tree: Any, state: Any,
+                rules: MeshRules) -> Any:
+    """Optimizer-state specs: mirror the param spec when ranks match
+    (mu/nu/v buffers), replicate rank-mismatched leaves (scalars, step)."""
+    flat_params = {}
+
+    def record(path, leaf):
+        flat_params[_path_names(path)] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(record, params)
+    spec_by_path = {}
+
+    def record_spec(path, s):
+        spec_by_path[_path_names(path)] = s
+        return s
+
+    jax.tree_util.tree_map_with_path(record_spec, param_spec_tree,
+                                     is_leaf=lambda x: isinstance(x, P))
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        # state trees are nested one level deeper (state.mu.<param path>);
+        # find the longest param-path suffix match
+        for start in range(len(names)):
+            key = names[start:]
+            if key in flat_params:
+                if flat_params[key].ndim == leaf.ndim:
+                    return spec_by_path[key]
+                return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def batch_specs(batch: Any, rules: MeshRules) -> Any:
+    """Batch over the batch axes; sequence-parallel fallback for batch==1."""
+    dspec, ds = rules.batch_spec(), rules.batch_size_eff
+
+    def spec(leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        if _div(shape[0], ds):
+            return P(dspec, *([None] * (len(shape) - 1)))
+        if len(shape) >= 2 and _div(shape[1], ds):
+            return P(None, dspec, *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(spec, batch)
+
+
+# ----------------------------------------------------------------- activations
+#
+# XLA's sharding propagation picks pathological layouts for scan-carried
+# hidden states when left alone (observed: full rematerialization +
+# replication on the embedding gather).  The model code calls
+# ``constrain_hidden`` / ``constrain_logits`` at layer and loss boundaries;
+# they are no-ops unless a policy is installed (so tests and single-device
+# runs never touch mesh state).
+
+import contextlib
+import threading
+
+_ACT_POLICY = threading.local()
+
+
+@contextlib.contextmanager
+def activation_policy(rules: "MeshRules", *, seq_axis: Optional[str] = None):
+    """Install the activation-sharding policy for model code run inside.
+
+    ``seq_axis``: optionally shard the sequence dimension of hidden states
+    (sequence parallelism — used by long-context cells / perf variants).
+    """
+    _ACT_POLICY.rules = rules
+    _ACT_POLICY.seq_axis = seq_axis
+    try:
+        yield
+    finally:
+        _ACT_POLICY.rules = None
+        _ACT_POLICY.seq_axis = None
+
+
+def _policy() -> Tuple[Optional["MeshRules"], Optional[str]]:
+    return (getattr(_ACT_POLICY, "rules", None),
+            getattr(_ACT_POLICY, "seq_axis", None))
+
+
+def constrain_hidden(x):
+    """(B, S, d) hidden states: batch over data axes (sequence fallback
+    for batch-1), optional sequence parallelism over ``seq_axis``."""
+    rules, seq_axis = _policy()
+    if rules is None or x.ndim != 3:
+        return x
+    ds = rules.batch_size_eff
+    b, s, _ = x.shape
+    if b % ds == 0:
+        batch_s = rules.batch_spec()
+        seq_s = seq_axis if (seq_axis and s % rules.mesh.shape[seq_axis] == 0) \
+            else None
+    elif s % ds == 0:
+        batch_s, seq_s = None, rules.batch_spec()  # sequence-sharded
+    else:
+        batch_s, seq_s = None, None
+    return jax.lax.with_sharding_constraint(x, P(batch_s, seq_s, None))
+
+
+def constrain_logits(x):
+    """(B, T, V) logit chunks: batch over data, vocab over model (the
+    softmax reduction then runs as a model-axis psum)."""
+    rules, _ = _policy()
+    if rules is None or x.ndim != 3:
+        return x
+    b, _, v = x.shape
+    batch_s = rules.batch_spec() if b % rules.batch_size_eff == 0 else None
+    vocab_s = (rules.model_axis if rules.tp_enabled
+               and v % rules.model_size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(batch_s, None, vocab_s))
+
+
+def constrain_expert_stack(x):
+    """MoE dispatch/compute buffers (E, C, d|f): experts over model.
+    Without this, SPMD replicates the (E, C, d_expert) activations of
+    every expert on every chip (observed: 120+ GiB temp on the 16-expert
+    train cells)."""
+    rules, _ = _policy()
+    if rules is None or x.ndim != 3:
+        return x
+    e = x.shape[0]
+    m = (rules.model_axis if rules.tp_enabled and e % rules.model_size == 0
+         else None)
+    # (a capacity-dim data-sharded fallback for E=60 was tried and
+    # REVERTED: the cross-shard scatter it induces replicates worse —
+    # qwen2-moe prefill temp 9 -> 82 GiB; §Perf log)
+    return jax.lax.with_sharding_constraint(x, P(m, None, None))
+
+
+def constrain_token_stack(x):
+    """Flat token tensors ((T,), (T, d), (T, k, d)): tokens over the batch
+    axes when divisible."""
+    rules, _ = _policy()
+    if rules is None or x.ndim < 1:
+        return x
+    t_s = rules.batch_spec() if x.shape[0] % rules.batch_size_eff == 0 else None
+    return jax.lax.with_sharding_constraint(
+        x, P(t_s, *([None] * (x.ndim - 1))))
+
+
+def constrain_decode_scores(s):
+    """Decode attention scores (B, n_kv, g, q, S): batch over data, heads
+    over model (sequence over model as the GQA-small fallback) — stops
+    SPMD replicating the (B, H, S) f32 score tensor per chip."""
+    rules, _ = _policy()
+    if rules is None or s.ndim != 5:
+        return s
+    b, h = s.shape[0], s.shape[1]
+    batch_s = rules.batch_spec() if b % rules.batch_size_eff == 0 else None
+    head_s = seq_s = None
+    if rules.tp_enabled:
+        if h % rules.model_size == 0:
+            head_s = rules.model_axis
+        elif s.shape[-1] % rules.model_size == 0:
+            seq_s = rules.model_axis
+    return jax.lax.with_sharding_constraint(
+        s, P(batch_s, head_s, None, None, seq_s))
+
+
+def cache_specs(caches: Any, rules: MeshRules) -> Any:
+    """Decode-cache specs.  Leading axis is the period stack (never
+    sharded); then prefer batch -> data, heads -> model, else
+    sequence -> model / data (length-sharded KV for batch-1 decode)."""
+    dspec, ds, ms = rules.data_spec(), rules.data_size, rules.model_size
+    m = rules.model_axis
+
+    def spec(leaf):
+        shape = leaf.shape
+        out: list = [None] * len(shape)
+        if len(shape) < 2:
+            return P(*out)
+        dims = list(range(1, len(shape)))  # skip period-stack axis
+        # batch axis (index 1): data
+        used_data = False
+        if _div(shape[1], ds):
+            out[1] = dspec
+            used_data = True
+        # model axis: first remaining divisible dim, preferring heads
+        # (axis -2 for attention kv (np,B,S,H,D)), else any
+        cand = [i for i in dims[1:] if _div(shape[i], ms)]
+        pref = [i for i in cand if shape[i] <= 128] + \
+               [i for i in cand if shape[i] > 128]
+        if pref:
+            out[pref[0]] = m
+        if not used_data:
+            # batch not shardable (e.g. B=1): put data on the longest
+            # remaining divisible dim (sequence)
+            rem = [i for i in dims[1:] if out[i] is None and _div(shape[i], ds)]
+            if rem:
+                j = max(rem, key=lambda i: shape[i])
+                out[j] = dspec
+        return P(*out)
+
+    return jax.tree.map(spec, caches)

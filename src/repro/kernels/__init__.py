@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+    mht_panel    fused VMEM-resident MHT panel factorization (DOT4 analogue)
+    wy_trailing  fused WY trailing update  C - V (T^T (V^T C))
+
+``ops`` holds the jit'd public wrappers (interpret-mode on CPU), ``ref``
+the pure-jnp oracles the tests pin against.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

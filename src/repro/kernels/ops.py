@@ -1,0 +1,82 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU the kernels run compiled; everywhere else they
+run in ``interpret=True`` mode (the kernel body executes in Python/XLA on
+CPU) so correctness is validated in CI without hardware.  Callers can
+force either with ``interpret=``.
+
+Padding: ``wy_trailing`` pads the C column count to the tile size and
+strips it after; ``mht_panel`` takes the panel exactly as given (the
+panel IS the block).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mht_panel import mht_panel_pallas
+from repro.kernels.wy_trailing import wy_trailing_pallas
+
+Array = jax.Array
+
+__all__ = ["mht_panel", "wy_trailing", "vmem_bytes_mht_panel", "default_interpret"]
+
+_VMEM_BUDGET = 8 * 1024 * 1024  # half of v5e VMEM, leaves double-buffer room
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def vmem_bytes_mht_panel(m: int, b: int) -> int:
+    """fp32 working set of the panel kernel (panel + packed copy)."""
+    return 2 * m * b * 4
+
+
+@functools.partial(jax.jit, static_argnames=("row0", "interpret"))
+def _mht_panel_jit(panel: Array, row0: int, interpret: bool):
+    return mht_panel_pallas(panel, row0=row0, interpret=interpret)
+
+
+def mht_panel(panel: Array, *, row0: int = 0,
+              interpret: bool | None = None) -> Tuple[Array, Array]:
+    """Fused VMEM-resident MHT panel factorization.
+
+    Returns (packed, taus) exactly like
+    :func:`repro.core.blocked.panel_factor`; oracle:
+    :func:`repro.kernels.ref.mht_panel_ref`.
+    """
+    m, b = panel.shape
+    if vmem_bytes_mht_panel(m, b) > _VMEM_BUDGET:
+        raise ValueError(
+            f"panel ({m},{b}) exceeds VMEM budget "
+            f"({vmem_bytes_mht_panel(m, b)} > {_VMEM_BUDGET}); "
+            "factor via TSQR leaves instead")
+    interp = default_interpret() if interpret is None else interpret
+    return _mht_panel_jit(panel, row0, interp)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def _wy_trailing_jit(v: Array, t: Array, c: Array, bn: int, interpret: bool):
+    n = c.shape[1]
+    n_pad = (n + bn - 1) // bn * bn
+    c_p = jnp.pad(c, ((0, 0), (0, n_pad - n))) if n_pad != n else c
+    out = wy_trailing_pallas(v, t, c_p, bn=bn, interpret=interpret)
+    return out[:, :n]
+
+
+def wy_trailing(v: Array, t: Array, c: Array, *, bn: int = 128,
+                interpret: bool | None = None) -> Array:
+    """Fused WY trailing update ``C - V (T^T (V^T C))``.
+
+    Oracle: :func:`repro.kernels.ref.wy_trailing_ref`."""
+    m, k = v.shape
+    if (m * bn + m * k + k * k + k * bn) * 4 > _VMEM_BUDGET:
+        raise ValueError(f"wy_trailing working set too large for VMEM: m={m} k={k} bn={bn}")
+    interp = default_interpret() if interpret is None else interpret
+    bn_eff = min(bn, max(8, c.shape[1]))
+    return _wy_trailing_jit(v, t, c, bn_eff, interp)

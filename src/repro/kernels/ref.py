@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package pins its numerics against exactly one of
+these functions (tests sweep shapes/dtypes and assert_allclose).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = ["mht_panel_ref", "wy_trailing_ref", "ht_update_two_pass_ref"]
+
+
+def mht_panel_ref(panel: Array, row0: int = 0) -> Tuple[Array, Array]:
+    """Oracle for :mod:`repro.kernels.mht_panel`.
+
+    Factor an (m, b) panel whose column ``lj`` pivots at row ``row0 + lj``
+    with the fused MHT update.  fp32 internally regardless of input dtype
+    (the kernel computes in fp32 on the VPU)."""
+    from repro.core.blocked import panel_factor
+
+    dtype = panel.dtype
+    packed, taus = panel_factor(panel.astype(jnp.float32), row0, method="mht")
+    return packed.astype(dtype), taus.astype(dtype)
+
+
+def wy_trailing_ref(v: Array, t: Array, c: Array) -> Array:
+    """Oracle for :mod:`repro.kernels.wy_trailing`:
+    ``C - V (T^T (V^T C))`` with fp32 accumulation."""
+    dtype = c.dtype
+    v32 = v.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    w = v32.T @ c32
+    w = t.astype(jnp.float32).T @ w
+    return (c32 - v32 @ w).astype(dtype)
+
+
+def ht_update_two_pass_ref(a: Array, v: Array, tau: Array) -> Array:
+    """Oracle for the classical two-pass trailing update (used by the
+    kernel-traffic benchmark): w = tau v^T A then A - v w."""
+    dtype = a.dtype
+    a32, v32 = a.astype(jnp.float32), v.astype(jnp.float32)
+    w = tau.astype(jnp.float32) * (v32 @ a32)
+    return (a32 - jnp.outer(v32, w)).astype(dtype)

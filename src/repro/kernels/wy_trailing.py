@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused WY trailing update  ``C <- C - V (T^T (V^T C))``.
+
+The blocked QR trailing update is three chained GEMMs.  Run naively that
+is three HBM round-trips over C-sized data; fused per column-tile it is
+one read + one write of C, with W = V^T C_tile and X = T^T W living
+entirely in VMEM.  This is the Level-3 counterpart of the paper's fused
+macro-op: the same "never let the intermediate leave the fast memory"
+co-design argument, re-blocked for the 128x128 MXU instead of the DOT4.
+
+Grid: one program per C column-tile (bn columns).  V (m, k), T (k, k) are
+broadcast to every program; C tiles stream.  VMEM per program:
+m·bn + m·k + k·k + k·bn floats — the ops wrapper checks the budget and
+requires m ≤ 8192 for k, bn = 128.
+
+All matmuls run with fp32 accumulation (``preferred_element_type``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+__all__ = ["wy_trailing_kernel", "wy_trailing_pallas"]
+
+
+def wy_trailing_kernel(v_ref, t_ref, c_ref, out_ref):
+    """One C column-tile: W = V^T C (MXU), X = T^T W (MXU), C -= V X (MXU)."""
+    v = v_ref[...]
+    c = c_ref[...]
+    t = t_ref[...]
+    w = jnp.dot(v.T, c, preferred_element_type=jnp.float32)        # (k, bn)
+    x = jnp.dot(t.T.astype(jnp.float32), w,
+                preferred_element_type=jnp.float32)                # (k, bn)
+    upd = jnp.dot(v.astype(jnp.float32), x,
+                  preferred_element_type=jnp.float32)              # (m, bn)
+    out_ref[...] = (c.astype(jnp.float32) - upd).astype(out_ref.dtype)
+
+
+def wy_trailing_pallas(
+    v: Array, t: Array, c: Array, *, bn: int = 128, interpret: bool = False
+) -> Array:
+    """Fused trailing update over all of C, tiled bn columns at a time.
+
+    Requires c.shape[1] % bn == 0 (ops wrapper pads)."""
+    m, k = v.shape
+    n = c.shape[1]
+    if n % bn != 0:
+        raise ValueError(f"n={n} not a multiple of bn={bn}")
+    grid = (n // bn,)
+    return pl.pallas_call(
+        wy_trailing_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),   # V broadcast
+            pl.BlockSpec((k, k), lambda j: (0, 0)),   # T broadcast
+            pl.BlockSpec((m, bn), lambda j: (0, j)),  # C tile streams
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        interpret=interpret,
+    )(v, t, c)

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod
+axis extends data parallelism across the ICI/DCN boundary.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — the dry-run sets
+``xla_force_host_platform_device_count`` before first jax init and
+nothing here may run earlier.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import MeshRules
+
+__all__ = ["make_production_mesh", "make_rules", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = dict(shape=(16, 16), axes=("data", "model"))
+MULTI_POD = dict(shape=(2, 16, 16), axes=("pod", "data", "model"))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(mesh) -> MeshRules:
+    """MeshRules for either production mesh (pod folds into data)."""
+    if "pod" in mesh.axis_names:
+        return MeshRules(mesh=mesh, data_axes=("pod", "data"))
+    return MeshRules(mesh=mesh, data_axes=("data",))

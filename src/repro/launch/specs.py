@@ -1,0 +1,161 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs(arch, shape)`` returns everything needed to lower the cell
+WITHOUT allocating: the step callable, argument ShapeDtypeStructs, and
+their PartitionSpec trees.  Train cells lower ``train_step``; prefill
+cells lower ``forward_prefill``; decode cells lower ``serve_step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (
+    MeshRules, batch_specs, cache_specs, param_specs, state_specs,
+)
+from repro.models import init_caches, init_params
+from repro.models.transformer import forward_prefill
+from repro.serving.engine import serve_step
+from repro.training.train_step import TrainConfig, init_train_state, \
+    make_train_step
+
+__all__ = ["CellSpec", "input_specs", "cell_is_skipped", "train_microbatch"]
+
+_KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    step_fn: Callable           # the callable to lower
+    args_sds: Tuple[Any, ...]   # ShapeDtypeStruct pytrees
+    in_specs: Tuple[Any, ...]   # PartitionSpec pytrees (same structure)
+    kind: str                   # "train" | "prefill" | "decode"
+    rules: Any = None           # MeshRules actually used (variant may adjust)
+    donate: Tuple[int, ...] = ()  # donated arg indices (state / caches alias)
+    out_specs: Any = None       # out_shardings (None = let XLA choose);
+                                # required for donation to alias (the donated
+                                # input and the output must shard identically)
+    notes: str = ""
+
+
+def cell_is_skipped(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention architecture: 500k-token decode needs "
+                "sub-quadratic sequence mixing (DESIGN.md §7)")
+    return None
+
+
+def train_microbatch(cfg: ModelConfig, shape: ShapeConfig,
+                     rules: MeshRules) -> int:
+    """Global microbatch so one microbatch is ~1 sample per data shard for
+    the big models (activation ceiling), larger for the small ones."""
+    per_dev = 1 if cfg.d_model >= 2048 else 4
+    return min(shape.global_batch, rules.data_size * per_dev)
+
+
+def _batch_sds(cfg: ModelConfig, b: int, s: int, *, labels: bool) -> dict:
+    out = {}
+    if cfg.embedding_input:
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def _bf16_tree(sds_tree):
+    def cast(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        return s
+    return jax.tree.map(cast, sds_tree)
+
+
+_SMALL_MODEL_PARAMS = 4e9
+
+
+def input_specs(arch: str, shape_name: str, rules: MeshRules,
+                *, overrides: Optional[dict] = None,
+                variant: str = "baseline") -> CellSpec:
+    """``variant="optimized"`` applies the beyond-paper bundle logged in
+    EXPERIMENTS.md §Perf: causal block skipping, solve-based thin-Q in the
+    QR optimizer, once-per-step bf16 weight casts, 2x microbatch, and the
+    no-TP/pure-DP sharding policy for sub-4B models."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    if variant.startswith("optimized"):
+        cfg = cfg.scaled(attn_causal_skip=True)
+
+    params_sds = jax.eval_shape(lambda k: init_params(k, cfg), _KEY_SDS)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_sds))
+    if variant.startswith("optimized") and n_params < _SMALL_MODEL_PARAMS:
+        import dataclasses as _dc
+
+        all_axes = tuple(rules.mesh.axis_names)
+        rules = _dc.replace(rules, tp_enabled=False, batch_axes=all_axes)
+    pspecs = param_specs(params_sds, rules)
+
+    if shape.kind == "train":
+        mb = train_microbatch(cfg, shape, rules)
+        # (a 2x microbatch was tried and REVERTED: halves gather count but
+        # doubles activation temp past the 16 GB budget — §Perf log)
+        opt = variant.startswith("optimized")
+        tcfg = TrainConfig(optimizer="muon-qr", microbatch=mb,
+                           qr_q_method=("solve" if opt else "formq"),
+                           cast_params_once=(variant == "optimized"),
+                           qr_shard_leaves=(opt and "noshard" not in variant))
+        state_sds = jax.eval_shape(
+            lambda p: init_train_state(p, tcfg), params_sds)
+        state_specs_tree = type(state_sds)(
+            params=pspecs,
+            opt=state_specs(params_sds, pspecs, state_sds.opt, rules),
+            ef_error=P(),
+        )
+        batch = _batch_sds(cfg, shape.global_batch, shape.seq_len, labels=True)
+        bspecs = batch_specs(batch, rules)
+        lr_sds = jax.ShapeDtypeStruct((), jnp.float32)
+        step = make_train_step(cfg, tcfg)
+        return CellSpec(arch, shape, cfg, step,
+                        (state_sds, batch, lr_sds),
+                        (state_specs_tree, bspecs, P()),
+                        "train", rules=rules, donate=(0,),
+                        notes=f"microbatch={tcfg.microbatch};variant={variant}")
+
+    serve_params = _bf16_tree(params_sds)
+
+    if shape.kind == "prefill":
+        batch = _batch_sds(cfg, shape.global_batch, shape.seq_len, labels=False)
+        bspecs = batch_specs(batch, rules)
+        step = lambda p, b: forward_prefill(p, b, cfg)
+        return CellSpec(arch, shape, cfg, step, (serve_params, batch),
+                        (pspecs, bspecs), "prefill", rules=rules,
+                        notes=f"variant={variant}")
+
+    # decode: one token against a full-length cache
+    caches_sds = jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+    cspecs = cache_specs(caches_sds, rules)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_spec = batch_specs(tok, rules)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    step = lambda p, t, c, i: serve_step(p, t, cfg, c, i)
+    return CellSpec(arch, shape, cfg, step,
+                    (serve_params, tok, caches_sds, pos),
+                    (pspecs, tok_spec, cspecs, P()), "decode", rules=rules,
+                    donate=(2,), out_specs=(None, cspecs),
+                    notes=f"variant={variant}")

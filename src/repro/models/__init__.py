@@ -1,0 +1,24 @@
+"""Model zoo: one composable decoder covering all assigned architectures.
+
+    layers       norms, FFNs, embeddings, RoPE, soft-capping
+    attention    GQA chunked (flash-style) attention + cached decode
+    ssm          Mamba selective-scan mixer
+    xlstm        mLSTM / sLSTM blocks
+    moe          top-k capacity-dispatch Mixture-of-Experts
+    transformer  period-scanned stack, train/prefill/decode entry points
+"""
+
+from repro.models.transformer import (
+    active_param_count,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_caches,
+    init_params,
+    param_count,
+)
+
+__all__ = [
+    "init_params", "forward_train", "forward_prefill", "forward_decode",
+    "init_caches", "param_count", "active_param_count",
+]

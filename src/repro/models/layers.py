@@ -1,0 +1,123 @@
+"""Shared layer primitives: norms, FFNs, embeddings, RoPE, soft-capping.
+
+Module convention (no flax dependency): each layer is a pair of pure
+functions ``init_*(key, ...) -> params`` (a dict pytree, fp32) and an
+apply function taking (params, x).  Compute runs in the model dtype
+(bf16); params are kept fp32 and cast at use ("mixed precision, fp32
+master" policy).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = [
+    "dense_init", "dense", "norm_init", "apply_norm", "ffn_init", "ffn",
+    "embedding_init", "embed", "rope", "softcap",
+]
+
+
+def _normal(key, shape, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(jnp.float32)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None) -> dict:
+    scale = (1.0 / jnp.sqrt(d_in)) if scale is None else scale
+    p = {"w": _normal(key, (d_in, d_out), scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: dict, x: Array, *, dtype=None) -> Array:
+    dtype = x.dtype if dtype is None else dtype
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def norm_init(d: int, kind: str) -> dict:
+    if kind == "nonparam_ln":          # olmo: no gain/bias
+        return {}
+    if kind == "rmsnorm":
+        return {"g": jnp.zeros((d,), jnp.float32)}   # (1+g) parametrization
+    if kind == "layernorm":
+        return {"g": jnp.ones((d,), jnp.float32),
+                "b": jnp.zeros((d,), jnp.float32)}
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def apply_norm(p: dict, x: Array, kind: str, *, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        xf = xf * (1.0 + p["g"])
+    else:  # layernorm / nonparam_ln
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            xf = xf * p["g"] + p["b"]
+    return xf.astype(x.dtype)
+
+
+def ffn_init(key, d_model: int, d_ff: int, act: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, d_model)}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, d_model, d_ff)
+        p["up"] = dense_init(k3, d_model, d_ff)
+    else:  # gelu
+        p["up"] = dense_init(k1, d_model, d_ff)
+    return p
+
+
+def ffn(p: dict, x: Array, act: str, *, dtype=None) -> Array:
+    dtype = x.dtype if dtype is None else dtype
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x, dtype=dtype)) * dense(p["up"], x, dtype=dtype)
+    elif act == "geglu":
+        h = jax.nn.gelu(dense(p["gate"], x, dtype=dtype), approximate=True) * dense(
+            p["up"], x, dtype=dtype)
+    elif act == "gelu":
+        h = jax.nn.gelu(dense(p["up"], x, dtype=dtype), approximate=True)
+    else:
+        raise ValueError(f"unknown ffn act {act!r}")
+    return dense(p["down"], h, dtype=dtype)
+
+
+def embedding_init(key, vocab: int, d: int) -> dict:
+    return {"table": _normal(key, (vocab, d), 1.0)}
+
+
+def embed(p: dict, tokens: Array, *, dtype=jnp.bfloat16) -> Array:
+    return jnp.take(p["table"], tokens, axis=0).astype(dtype)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding; x is (..., S, H, D), positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    xf = x.astype(jnp.float32)
+    return (cap * jnp.tanh(xf / cap)).astype(x.dtype)

@@ -1,0 +1,176 @@
+"""Mamba (selective SSM) mixer — jamba's sequence backbone.
+
+Training/prefill: the selective scan runs chunked — an outer ``lax.scan``
+over sequence chunks carrying the (B, d_inner, d_state) SSM state, with a
+``jax.checkpoint``-wrapped associative scan inside each chunk.  Live
+memory is O(chunk · d_inner · d_state) and the backward pass recomputes
+within chunks, so 500k-token sequences fit.
+
+Decode: O(1) per token — one state update, which is why jamba qualifies
+for the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense, dense_init
+
+Array = jax.Array
+
+__all__ = ["mamba_init", "mamba_forward", "mamba_decode", "mamba_init_state"]
+
+
+def _d_inner(cfg) -> int:
+    return cfg.d_inner if cfg.d_inner is not None else 2 * cfg.d_model
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.dt_rank if cfg.dt_rank is not None else math.ceil(cfg.d_model / 16)
+
+
+def mamba_init(key, cfg) -> dict:
+    di, ds, dtr, k = _d_inner(cfg), cfg.d_state, _dt_rank(cfg), cfg.conv_kernel
+    keys = jax.random.split(key, 6)
+    # dt bias: init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba paper)
+    u = jax.random.uniform(keys[4], (di,), jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(keys[0], cfg.d_model, 2 * di),
+        "conv_w": jax.random.normal(keys[1], (k, di), jnp.float32) / math.sqrt(k),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(keys[2], di, dtr + 2 * ds),
+        "dt_proj": dense_init(keys[3], dtr, di),
+        "dt_bias": dt_bias,
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                          (di, ds))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[5], di, cfg.d_model),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along S. x: (B, S, di); w: (k, di)."""
+    k = w.shape[0]
+    lhs = x.astype(jnp.float32).transpose(0, 2, 1)      # (B, di, S)
+    rhs = w.astype(jnp.float32).T[:, None, :]            # (di, 1, k)
+    out = lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1,), padding=[(k - 1, 0)],
+        feature_group_count=lhs.shape[1])
+    return (out.transpose(0, 2, 1) + b).astype(x.dtype)
+
+
+def _ssm_params(p, xc, cfg):
+    """Input-dependent dt/B/C from the conv'd activations (B, S, di)."""
+    ds, dtr = cfg.d_state, _dt_rank(cfg)
+    xdb = dense(p["x_proj"], xc, dtype=jnp.float32)
+    dt_r, b_mat, c_mat = jnp.split(xdb, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]["w"] + p["dt_bias"])  # (B,S,di)
+    a = -jnp.exp(p["a_log"])                                       # (di,ds)
+    return dt, a, b_mat, c_mat
+
+
+def _scan_chunked(dt: Array, a: Array, xf: Array, b_mat: Array, c_mat: Array,
+                  h0: Array, chunk: int) -> Tuple[Array, Array]:
+    """y_t = C_t . h_t with h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t.
+
+    dt, xf: (B, S, di); a: (di, ds); b_mat, c_mat: (B, S, ds);
+    h0: (B, di, ds).  The (B, S, di, ds) discretization is NEVER
+    materialized for the full sequence — da/dbx are built per chunk
+    inside the checkpointed body (live memory O(chunk*di*ds); computing
+    them up-front costs B*S*di*ds*4 bytes ~ 34 GiB/layer at jamba's
+    train_4k shape and was the dominant temp before this fix)."""
+    b, s, di = dt.shape
+    ds = a.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n = s // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, n, chunk, *x.shape[2:]).transpose(
+            1, 0, 2, *range(3, x.ndim + 1))
+
+    dt_c, xf_c, bm_c, cm_c = (to_chunks(x) for x in (dt, xf, b_mat, c_mat))
+
+    @jax.checkpoint
+    def chunk_body(h, xs):
+        dt_i, xf_i, bm_i, cm_i = xs            # (B, chunk, di), ..., (B, chunk, ds)
+        da_i = jnp.exp(dt_i[..., None] * a)    # (B, chunk, di, ds)
+        dbx_i = (dt_i * xf_i)[..., None] * bm_i[:, :, None, :]
+        # fold the carry into the first element
+        dbx_i = dbx_i.at[:, 0].add(da_i[:, 0] * h)
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        _, h_all = lax.associative_scan(comb, (da_i, dbx_i), axis=1)
+        y = jnp.einsum("bcds,bcs->bcd", h_all, cm_i)  # (B, chunk, di)
+        return h_all[:, -1], y
+
+    h_last, ys = lax.scan(chunk_body, h0, (dt_c, xf_c, bm_c, cm_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    return y, h_last
+
+
+def mamba_forward(p: dict, x: Array, cfg, *, return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model) [, final states for prefill]."""
+    b, s, _ = x.shape
+    di = _d_inner(cfg)
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+
+    dt, a, b_mat, c_mat = _ssm_params(p, xc, cfg)
+    xf = xc.astype(jnp.float32)
+    h0 = jnp.zeros((b, di, cfg.d_state), jnp.float32)
+    y, h_last = _scan_chunked(dt, a, xf, b_mat, c_mat, h0, cfg.seq_chunk)
+    y = y + p["d_skip"] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(p["out_proj"], y)
+    if return_state:
+        k = cfg.conv_kernel
+        conv_state = x_in[:, -(k - 1):].astype(jnp.float32) if k > 1 else \
+            jnp.zeros((b, 0, di), jnp.float32)
+        return out, {"ssm": h_last, "conv": conv_state}
+    return out
+
+
+def mamba_init_state(cfg, batch: int) -> dict:
+    di, k = _d_inner(cfg), cfg.conv_kernel
+    return {
+        "ssm": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, k - 1, di), jnp.float32),
+    }
+
+
+def mamba_decode(p: dict, x: Array, cfg, state: dict) -> Tuple[Array, dict]:
+    """One token. x: (B, 1, d_model); state: {"ssm","conv"}."""
+    di, k = _d_inner(cfg), cfg.conv_kernel
+    xz = dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)          # (B, 1, di)
+    x_f = x_in[:, 0].astype(jnp.float32)
+
+    conv_state = state["conv"]                    # (B, k-1, di)
+    window = jnp.concatenate([conv_state, x_f[:, None]], axis=1)  # (B, k, di)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None]                 # (B, 1, di)
+
+    dt, a, b_mat, c_mat = _ssm_params(p, xc.astype(x.dtype), cfg)
+    dt, b_mat, c_mat = dt[:, 0], b_mat[:, 0], c_mat[:, 0]
+    da = jnp.exp(dt[..., None] * a)               # (B, di, ds)
+    dbx = (dt * xc[:, 0].astype(jnp.float32))[..., None] * b_mat[:, None, :]
+    h = da * state["ssm"] + dbx
+    y = jnp.einsum("bds,bs->bd", h, c_mat) + p["d_skip"] * xc[:, 0].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = dense(p["out_proj"], y[:, None].astype(x.dtype))
+    new_state = {"ssm": h, "conv": window[:, 1:] if k > 1 else conv_state}
+    return out, new_state

@@ -1,0 +1,298 @@
+"""Composable decoder stack: any period pattern of {attn, attn_local,
+mamba, mlstm, slstm} x {dense, moe, none} blocks.
+
+The layer stack is a ``lax.scan`` over *periods* (stacked parameters), so
+the HLO contains each distinct block exactly once regardless of depth —
+compile time and program size are O(len(period)), which is what makes the
+40-cell dry-run tractable.  Remat policy is applied to the period body.
+
+Three entry points (all pure):
+    forward_train(params, batch, cfg)                 -> (logits, aux)
+    forward_prefill(params, batch, cfg)               -> (logits, caches)
+    forward_decode(params, tokens, cfg, caches, pos)  -> (logits, caches)
+
+Caches are a tuple (one per period position) of dicts stacked over
+periods — attention holds (k, v) rings, SSM/xLSTM hold recurrent state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.sharding import constrain_hidden
+from repro.models import attention, moe as moe_mod, ssm, xlstm
+from repro.models.layers import (
+    apply_norm, dense, dense_init, embed, embedding_init, ffn, ffn_init,
+    norm_init, softcap,
+)
+
+Array = jax.Array
+
+__all__ = ["init_params", "forward_train", "forward_prefill", "forward_decode",
+           "init_caches", "param_count", "active_param_count"]
+
+
+# ------------------------------------------------------------------ init
+
+def _layer_init(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    keys = jax.random.split(key, 4)
+    p: dict = {"norm1": norm_init(cfg.d_model, cfg.norm)}
+    if spec.mixer in ("attn", "attn_local"):
+        p["mixer"] = attention.attn_init(keys[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm.mamba_init(keys[0], cfg)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm.mlstm_init(keys[0], cfg)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm.slstm_init(keys[0], cfg)
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer!r}")
+    if cfg.post_norm:
+        p["norm1_post"] = norm_init(cfg.d_model, cfg.norm)
+    if spec.ffn == "dense":
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm)
+        p["ffn"] = ffn_init(keys[1], cfg.d_model, cfg.d_ff, cfg.ffn_act)
+    elif spec.ffn == "moe":
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm)
+        p["moe"] = moe_mod.moe_init(keys[1], cfg)
+    elif spec.ffn != "none":
+        raise ValueError(f"unknown ffn {spec.ffn!r}")
+    if spec.ffn != "none" and cfg.post_norm:
+        p["norm2_post"] = norm_init(cfg.d_model, cfg.norm)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.period) + 3)
+    params: dict = {}
+    params["embed"] = embedding_init(keys[0], cfg.vocab_size, cfg.d_model)
+    if cfg.embedding_input:
+        # modality-frontend stub: identity-init adapter over supplied embeds
+        params["adapter"] = dense_init(keys[1], cfg.d_model, cfg.d_model)
+    layers = []
+    for pi, spec in enumerate(cfg.period):
+        pkeys = jax.random.split(keys[2 + pi], cfg.n_periods)
+        stacked = jax.vmap(lambda k: _layer_init(k, cfg, spec))(pkeys)
+        layers.append(stacked)
+    params["layers"] = tuple(layers)
+    params["final_norm"] = norm_init(cfg.d_model, cfg.norm)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab_size)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE counts top_k + shared experts)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if cfg.moe is not None and any(k in ("gate_w", "up_w", "down_w") for k in keys):
+            total += leaf.size * cfg.moe.top_k // cfg.moe.num_experts
+        else:
+            total += leaf.size
+    return total
+
+
+# ------------------------------------------------------------------ blocks
+
+def _apply_mixer(p, x, cfg, spec, *, mode, cache, pos):
+    """Returns (y, new_cache)."""
+    local = spec.mixer == "attn_local"
+    if spec.mixer in ("attn", "attn_local"):
+        if mode == "decode":
+            y, (ck, cv) = attention.attn_decode(
+                p["mixer"], x, cfg, local=local,
+                cache_k=cache["k"], cache_v=cache["v"], cur_len=pos)
+            return y, {"k": ck, "v": cv}
+        if mode == "prefill":
+            y, (k, v) = attention.attn_forward(p["mixer"], x, cfg, local=local,
+                                               return_kv=True)
+            return y, {"k": k, "v": v}
+        return attention.attn_forward(p["mixer"], x, cfg, local=local), None
+    if spec.mixer == "mamba":
+        if mode == "decode":
+            y, st = ssm.mamba_decode(p["mixer"], x, cfg, cache)
+            return y, st
+        if mode == "prefill":
+            return ssm.mamba_forward(p["mixer"], x, cfg, return_state=True)
+        return ssm.mamba_forward(p["mixer"], x, cfg), None
+    if spec.mixer == "mlstm":
+        if mode == "decode":
+            y, st = xlstm.mlstm_decode(p["mixer"], x, cfg, cache)
+            return y, st
+        if mode == "prefill":
+            return xlstm.mlstm_forward(p["mixer"], x, cfg, return_state=True)
+        return xlstm.mlstm_forward(p["mixer"], x, cfg), None
+    if spec.mixer == "slstm":
+        if mode == "decode":
+            y, st = xlstm.slstm_decode(p["mixer"], x, cfg, cache)
+            return y, st
+        if mode == "prefill":
+            return xlstm.slstm_forward(p["mixer"], x, cfg, return_state=True)
+        return xlstm.slstm_forward(p["mixer"], x, cfg), None
+    raise ValueError(spec.mixer)
+
+
+def _apply_layer(p, x, cfg, spec, *, mode, cache, pos):
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    y, new_cache = _apply_mixer(p, h, cfg, spec, mode=mode, cache=cache, pos=pos)
+    if cfg.post_norm:
+        y = apply_norm(p["norm1_post"], y, cfg.norm)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != "none":
+        h = apply_norm(p["norm2"], x, cfg.norm)
+        if spec.ffn == "dense":
+            y = ffn(p["ffn"], h, cfg.ffn_act)
+        else:
+            y, aux = moe_mod.moe_forward(p["moe"], h, cfg)
+        if cfg.post_norm:
+            y = apply_norm(p["norm2_post"], y, cfg.norm)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _stack_scan(params, x0, cfg, *, mode, caches=None, pos=None):
+    """Scan the period body over n_periods. Returns (x, new_caches, aux)."""
+    specs = cfg.period
+    layers = params["layers"]
+
+    def period_body(carry, xs):
+        x, aux = carry
+        x = constrain_hidden(x)
+        layer_ps, layer_caches = xs
+        new_caches = []
+        for pi, spec in enumerate(specs):
+            cache = None if layer_caches is None else layer_caches[pi]
+            x, nc, a = _apply_layer(layer_ps[pi], x, cfg, spec,
+                                    mode=mode, cache=cache, pos=pos)
+            aux = aux + a
+            new_caches.append(nc)
+        out = tuple(new_caches) if mode in ("prefill", "decode") else None
+        return (x, aux), out
+
+    body = _remat_wrap(period_body, cfg) if mode == "train" else period_body
+    aux0 = jnp.zeros((), jnp.float32)
+    xs = (layers, caches if caches is not None else None)
+    if caches is None:
+        # lax.scan needs a pytree with leading axis; replace None by a dummy
+        xs = (layers, tuple({} for _ in specs))
+    (x, aux), ys = lax.scan(body, (x0, aux0), xs)
+    return x, ys, aux
+
+
+# ------------------------------------------------------------------ heads
+
+def _lm_logits(params, x, cfg):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T.astype(x.dtype)
+    else:
+        logits = dense(params["lm_head"], x)
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def _embed_input(params, batch, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.embedding_input and "embeds" in batch:
+        return dense(params["adapter"], batch["embeds"].astype(dtype))
+    x = embed(params["embed"], batch["tokens"], dtype=dtype)
+    if cfg.norm == "rmsnorm" and cfg.post_norm:  # gemma-style embed scaling
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+# ------------------------------------------------------------------ API
+
+def forward_hidden(params, batch, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Backbone only: final normed hidden states (B, S, d) + moe aux.
+
+    The training loss projects to the vocabulary chunk-by-chunk (fused
+    softmax-CE) instead of materializing (B, S, V) logits."""
+    x = constrain_hidden(_embed_input(params, batch, cfg))
+    x, _, aux = _stack_scan(params, x, cfg, mode="train")
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def lm_head_weight(params, cfg: ModelConfig) -> Array:
+    """(d, V) projection — the embedding transpose when tied."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def forward_train(params, batch, cfg: ModelConfig) -> Tuple[Array, Array]:
+    x, aux = forward_hidden(params, batch, cfg)
+    return _lm_logits(params, x, cfg), aux
+
+
+def forward_prefill(params, batch, cfg: ModelConfig):
+    """Prefill: populate caches; logits only for the LAST position (B,1,V)
+    — serving never needs the (B, S, V) tensor and at 32k x 152k vocab it
+    would dominate HBM."""
+    x = constrain_hidden(_embed_input(params, batch, cfg))
+    x, caches, _ = _stack_scan(params, x, cfg, mode="prefill")
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg.norm)
+    return _lm_logits(params, x, cfg), caches
+
+
+def forward_decode(params, tokens: Array, cfg: ModelConfig, caches, pos: Array):
+    """tokens: (B, 1) ids; pos: scalar current length."""
+    x = embed(params["embed"], tokens, dtype=jnp.dtype(cfg.dtype))
+    if cfg.embedding_input:
+        # early-fusion archs run the frontend adapter on token embeddings
+        # too, so decode is consistent with embedding-fed prefill
+        x = dense(params["adapter"], x)
+    if cfg.norm == "rmsnorm" and cfg.post_norm:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x, new_caches, _ = _stack_scan(params, x, cfg, mode="decode", caches=caches,
+                                   pos=pos)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return _lm_logits(params, x, cfg), new_caches
+
+
+# ------------------------------------------------------------------ caches
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int,
+                dtype=jnp.bfloat16) -> Tuple[Any, ...]:
+    """Decode caches, one entry per period position, stacked over periods."""
+    caches = []
+    np_ = cfg.n_periods
+
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (np_, *a.shape)), tree)
+
+    for spec in cfg.period:
+        if spec.mixer in ("attn", "attn_local"):
+            kv = jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.d_head), dtype)
+            caches.append({"k": jnp.broadcast_to(kv, (np_, *kv.shape)),
+                           "v": jnp.broadcast_to(kv, (np_, *kv.shape))})
+        elif spec.mixer == "mamba":
+            caches.append(stack(ssm.mamba_init_state(cfg, batch)))
+        elif spec.mixer == "mlstm":
+            caches.append(stack(xlstm.mlstm_init_state(cfg, batch)))
+        elif spec.mixer == "slstm":
+            caches.append(stack(xlstm.slstm_init_state(cfg, batch)))
+        else:
+            raise ValueError(spec.mixer)
+    return tuple(caches)

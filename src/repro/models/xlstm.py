@@ -1,0 +1,302 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to the xLSTM paper's cell equations with stabilized exponential
+gating (the m-state trick); structural simplifications are documented in
+DESIGN.md:
+
+  * mLSTM: pre-LN block, up-projection (factor 2), causal conv4 + SiLU
+    feeding q/k (v from the unconv'd branch), block-diagonal per-head
+    q/k/v, matrix memory C_t = f C_{t-1} + i v k^T, head-wise norm, output
+    gated by SiLU(z), down-projection.  Training runs the recurrence as a
+    chunk-checkpointed sequential scan (the state is a (dh x dh) matrix
+    per head, so the parallel quadratic form is traded for O(1)-memory
+    recurrence; see EXPERIMENTS.md perf notes).
+  * sLSTM: scalar memory with recurrent (h_{t-1}) gate contributions —
+    inherently sequential — block-diagonal recurrent matrices per head,
+    followed by a gated FFN (factor 4/3).
+
+Both expose decode steps with explicit state for serving, making xlstm
+eligible for the long_500k cell (O(1) memory per token).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import apply_norm, dense, dense_init, ffn, ffn_init
+
+Array = jax.Array
+
+__all__ = [
+    "mlstm_init", "mlstm_forward", "mlstm_decode", "mlstm_init_state",
+    "slstm_init", "slstm_forward", "slstm_decode", "slstm_init_state",
+]
+
+
+# --------------------------------------------------------------------- mLSTM
+
+def _mlstm_dims(cfg) -> Tuple[int, int, int]:
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    return di, h, di // h
+
+
+def mlstm_init(key, cfg) -> dict:
+    di, h, dh = _mlstm_dims(cfg)
+    keys = jax.random.split(key, 8)
+    blk = lambda k: jax.random.normal(k, (h, dh, dh), jnp.float32) / math.sqrt(dh)
+    return {
+        "up": dense_init(keys[0], cfg.d_model, 2 * di),
+        "conv_w": jax.random.normal(keys[1], (cfg.conv_kernel, di), jnp.float32)
+        / math.sqrt(cfg.conv_kernel),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": blk(keys[2]),
+        "wk": blk(keys[3]),
+        "wv": blk(keys[4]),
+        "w_if": dense_init(keys[5], di, 2 * h),
+        "if_bias": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]
+                                   ).astype(jnp.float32),
+        "head_norm": {"g": jnp.zeros((di,), jnp.float32)},
+        "down": dense_init(keys[6], di, cfg.d_model),
+    }
+
+
+def _causal_conv(x, w, b):
+    k = w.shape[0]
+    lhs = x.astype(jnp.float32).transpose(0, 2, 1)
+    rhs = w.astype(jnp.float32).T[:, None, :]
+    out = lax.conv_general_dilated(lhs, rhs, (1,), [(k - 1, 0)],
+                                   feature_group_count=lhs.shape[1])
+    return (out.transpose(0, 2, 1) + b).astype(x.dtype)
+
+
+def _mlstm_qkvif(p, x, cfg):
+    """Projections for a (B, S, d) input -> q,k,v (B,S,H,dh), i,f (B,S,H)."""
+    di, h, dh = _mlstm_dims(cfg)
+    xz = dense(p["up"], x)
+    x_m, z = jnp.split(xz, 2, axis=-1)                       # (B,S,di)
+    xc = jax.nn.silu(_causal_conv(x_m, p["conv_w"], p["conv_b"]))
+    xch = xc.reshape(*xc.shape[:-1], h, dh)
+    xmh = x_m.reshape(*x_m.shape[:-1], h, dh)
+    q = jnp.einsum("...hd,hde->...he", xch.astype(jnp.float32), p["wq"])
+    k = jnp.einsum("...hd,hde->...he", xch.astype(jnp.float32), p["wk"])
+    v = jnp.einsum("...hd,hde->...he", xmh.astype(jnp.float32), p["wv"])
+    gates = xc.astype(jnp.float32) @ p["w_if"]["w"] + p["if_bias"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)              # (B,S,H)
+    return q, k / math.sqrt(dh), v, i_pre, f_pre, z
+
+
+def _mlstm_step(state, inputs):
+    """One recurrence step. state: (C, n, m); inputs: (q,k,v,i,f) at t."""
+    c, n, m = state
+    q, k, v, i_pre, f_pre = inputs
+    log_f = -jax.nn.softplus(-f_pre)                          # log sigmoid
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c = f_g[..., None, None] * c + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :])                    # (B,H,dh,dh)
+    n = f_g[..., None] * n + i_g[..., None] * k
+    h_num = jnp.einsum("bhd,bhde->bhe", q, c)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                        jnp.exp(-m_new))
+    h = h_num / denom[..., None]
+    return (c, n, m_new), h
+
+
+def mlstm_init_state(cfg, batch: int) -> dict:
+    di, h, dh = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di), jnp.float32),
+    }
+
+
+def mlstm_forward(p: dict, x: Array, cfg, *, return_state: bool = False):
+    b, s, _ = x.shape
+    di, h, dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, z = _mlstm_qkvif(p, x, cfg)
+
+    chunk = min(cfg.seq_chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+
+    def to_chunks(a):
+        return a.reshape(b, n_chunks, chunk, *a.shape[2:]).transpose(
+            1, 2, 0, *range(3, a.ndim + 1))  # (nc, chunk, B, ...)
+
+    xs = tuple(to_chunks(a) for a in (q, k, v, i_pre, f_pre))
+
+    @jax.checkpoint
+    def chunk_body(state, xs_c):
+        state, hs = lax.scan(_mlstm_step, state, xs_c)
+        return state, hs
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    state, hs = lax.scan(chunk_body, (c0, n0, m0), xs)       # hs (nc, chunk, B, H, dh)
+    hflat = hs.transpose(2, 0, 1, 3, 4).reshape(b, s, di)
+    hflat = apply_norm(p["head_norm"], hflat.astype(x.dtype), "rmsnorm")
+    out = hflat.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = dense(p["down"], out.astype(x.dtype))
+    if return_state:
+        kk = cfg.conv_kernel
+        x_m = jnp.split(dense(p["up"], x), 2, axis=-1)[0]
+        conv_state = x_m[:, -(kk - 1):].astype(jnp.float32)
+        return y, {"c": state[0], "n": state[1], "m": state[2], "conv": conv_state}
+    return y
+
+
+def mlstm_decode(p: dict, x: Array, cfg, state: dict) -> Tuple[Array, dict]:
+    """One token. x: (B, 1, d)."""
+    di, h, dh = _mlstm_dims(cfg)
+    xz = dense(p["up"], x)
+    x_m, z = jnp.split(xz, 2, axis=-1)                        # (B,1,di)
+    window = jnp.concatenate([state["conv"], x_m[:, 0].astype(jnp.float32)[:, None]],
+                             axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])
+    xch = xc.reshape(-1, h, dh)
+    xmh = x_m[:, 0].reshape(-1, h, dh).astype(jnp.float32)
+    q = jnp.einsum("bhd,hde->bhe", xch, p["wq"])
+    k = jnp.einsum("bhd,hde->bhe", xch, p["wk"]) / math.sqrt(dh)
+    v = jnp.einsum("bhd,hde->bhe", xmh, p["wv"])
+    gates = xc @ p["w_if"]["w"] + p["if_bias"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    (c, n, m), hvec = _mlstm_step((state["c"], state["n"], state["m"]),
+                                  (q, k, v, i_pre, f_pre))
+    hflat = hvec.reshape(-1, 1, di).astype(x.dtype)
+    hflat = apply_norm(p["head_norm"], hflat, "rmsnorm")
+    out = hflat.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = dense(p["down"], out.astype(x.dtype))
+    return y, {"c": c, "n": n, "m": m, "conv": window[:, 1:]}
+
+
+# --------------------------------------------------------------------- sLSTM
+
+def _slstm_dims(cfg) -> Tuple[int, int]:
+    h = cfg.n_heads
+    return h, cfg.d_model // h
+
+
+def slstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    h, dh = _slstm_dims(cfg)
+    keys = jax.random.split(key, 6)
+    ffn_dim = int(round(cfg.slstm_ffn_factor * d / 64) * 64)
+    return {
+        "conv_w": jax.random.normal(keys[0], (cfg.conv_kernel, d), jnp.float32)
+        / math.sqrt(cfg.conv_kernel),
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "w_if": dense_init(keys[1], d, 2 * d),     # i,f from conv'd input
+        "w_zo": dense_init(keys[2], d, 2 * d),     # z,o from raw input
+        "r": jax.random.normal(keys[3], (h, dh, 4 * dh), jnp.float32)
+        / math.sqrt(dh),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((d,)), 3.0 * jnp.ones((d,)), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "group_norm": {"g": jnp.zeros((d,), jnp.float32)},
+        "out": dense_init(keys[4], d, d),
+        "ffn": ffn_init(keys[5], d, ffn_dim, "geglu"),
+    }
+
+
+def _slstm_step(state, inputs, *, r, h_heads, dh):
+    c, n, m, h_prev = state
+    wx_if, wx_zo = inputs                                     # (B, 2d) each
+    rh = jnp.einsum("bhd,hde->bhe", h_prev.reshape(-1, h_heads, dh), r)
+    rh = rh.reshape(h_prev.shape[0], 4 * h_heads * dh)        # (B, 4d)
+    r_i, r_f, r_z, r_o = jnp.split(rh, 4, axis=-1)
+    i_pre = wx_if[:, : wx_if.shape[1] // 2] + r_i
+    f_pre = wx_if[:, wx_if.shape[1] // 2 :] + r_f
+    z_pre = wx_zo[:, : wx_zo.shape[1] // 2] + r_z
+    o_pre = wx_zo[:, wx_zo.shape[1] // 2 :] + r_o
+    m_new = jnp.maximum(f_pre + m, i_pre)                     # exp f gating
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_pre + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z_pre)
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(o_pre) * (c / jnp.maximum(n, 1e-6))
+    return (c, n, m_new, h), h
+
+
+def slstm_init_state(cfg, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d), jnp.float32),
+    }
+
+
+def _slstm_gate_inputs(p, x):
+    xc = jax.nn.silu(_causal_conv(x, p["conv_w"], p["conv_b"]))
+    bias_if, bias_zo = jnp.split(p["gate_bias"], 2)
+    wx_if = xc.astype(jnp.float32) @ p["w_if"]["w"] + bias_if
+    wx_zo = x.astype(jnp.float32) @ p["w_zo"]["w"] + bias_zo
+    return wx_if, wx_zo
+
+
+def slstm_forward(p: dict, x: Array, cfg, *, return_state: bool = False):
+    b, s, d = x.shape
+    h_heads, dh = _slstm_dims(cfg)
+    wx_if, wx_zo = _slstm_gate_inputs(p, x)
+
+    chunk = min(cfg.seq_chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    xs = tuple(a.reshape(b, nc, chunk, 2 * d).transpose(1, 2, 0, 3)
+               for a in (wx_if, wx_zo))
+
+    import functools
+    step = functools.partial(_slstm_step, r=p["r"], h_heads=h_heads, dh=dh)
+
+    @jax.checkpoint
+    def chunk_body(state, xs_c):
+        return lax.scan(step, state, xs_c)
+
+    state0 = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+              jnp.full((b, d), -1e30, jnp.float32), jnp.zeros((b, d), jnp.float32))
+    state, hs = lax.scan(chunk_body, state0, xs)              # (nc, chunk, B, d)
+    hseq = hs.transpose(2, 0, 1, 3).reshape(b, s, d).astype(x.dtype)
+    hseq = apply_norm(p["group_norm"], hseq, "rmsnorm")
+    y = dense(p["out"], hseq)
+    y = y + ffn(p["ffn"], y, "geglu")
+    if return_state:
+        kk = cfg.conv_kernel
+        conv_state = x[:, -(kk - 1):].astype(jnp.float32)
+        return y, {"c": state[0], "n": state[1], "m": state[2], "h": state[3],
+                   "conv": conv_state}
+    return y
+
+
+def slstm_decode(p: dict, x: Array, cfg, state: dict) -> Tuple[Array, dict]:
+    b = x.shape[0]
+    d = cfg.d_model
+    h_heads, dh = _slstm_dims(cfg)
+    window = jnp.concatenate([state["conv"], x[:, 0].astype(jnp.float32)[:, None]],
+                             axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])
+    bias_if, bias_zo = jnp.split(p["gate_bias"], 2)
+    wx_if = xc @ p["w_if"]["w"] + bias_if
+    wx_zo = x[:, 0].astype(jnp.float32) @ p["w_zo"]["w"] + bias_zo
+
+    import functools
+    step = functools.partial(_slstm_step, r=p["r"], h_heads=h_heads, dh=dh)
+    (c, n, m, h), hvec = step((state["c"], state["n"], state["m"], state["h"]),
+                              (wx_if, wx_zo))
+    hseq = apply_norm(p["group_norm"], hvec[:, None].astype(x.dtype), "rmsnorm")
+    y = dense(p["out"], hseq)
+    y = y + ffn(p["ffn"], y, "geglu")
+    return y, {"c": c, "n": n, "m": m, "h": h, "conv": window[:, 1:]}

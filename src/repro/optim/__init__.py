@@ -1,0 +1,20 @@
+"""Optimizers: QR-Muon (the paper's MHT QR as orthogonalizer) + AdamW.
+
+    adamw          baseline / fallback optimizer
+    qr_muon        Muon with MHT-QR or Newton-Schulz orthogonalization
+    newton_schulz  the NS quintic baseline
+    schedule       warmup+cosine LR
+"""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.newton_schulz import newton_schulz_orthogonalize
+from repro.optim.qr_muon import (
+    MuonState, is_muon_param, muon_init, muon_update, qr_orthogonalize_2d,
+)
+from repro.optim.schedule import warmup_cosine
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update",
+    "MuonState", "muon_init", "muon_update", "is_muon_param",
+    "qr_orthogonalize_2d", "newton_schulz_orthogonalize", "warmup_cosine",
+]

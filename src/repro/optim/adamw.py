@@ -1,0 +1,63 @@
+"""AdamW — baseline optimizer and the fallback for non-matrix params.
+
+Pure-functional (optax-style): ``init(params) -> state``,
+``update(grads, state, params, lr, ...) -> (new_params, new_state)``.
+State is fp32, shaped/sharded like the params.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update"]
+
+
+class _Out(NamedTuple):
+    p: object
+    m: object
+    v: object
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: object
+    v: object
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(params),
+                      v=zeros(params))
+
+
+def adamw_update(
+    grads, state: AdamWState, params, *,
+    lr: float | Array, b1: float = 0.9, b2: float = 0.95,
+    eps: float = 1e-8, weight_decay: float = 0.1,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * (g * g)
+        mh = m / bc1
+        vh = v / bc2
+        new_p = p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree.map(lambda *a: _Out(*upd(*a)), params, grads, state.m,
+                       state.v)
+    is_out = lambda x: isinstance(x, _Out)
+    new_params = jax.tree.map(lambda o: o.p, out, is_leaf=is_out)
+    new_m = jax.tree.map(lambda o: o.m, out, is_leaf=is_out)
+    new_v = jax.tree.map(lambda o: o.v, out, is_leaf=is_out)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,37 @@
+"""Newton-Schulz orthogonalization — the Muon-default baseline the QR path
+is ablated against (DESIGN.md §3).
+
+Quintic NS iteration (Keller Jordan's Muon coefficients): approximates
+UV^T of the input's SVD.  Works on the normalized matrix; 5 iterations in
+bf16 is the published recipe, fp32 here since our host is CPU and the
+optimizer state is fp32 anyway.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = ["newton_schulz_orthogonalize"]
+
+_NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def newton_schulz_orthogonalize(g: Array, *, steps: int = 5,
+                                eps: float = 1e-7) -> Array:
+    """Approximate orthogonal factor (UV^T) of a 2-D matrix."""
+    if g.ndim != 2:
+        raise ValueError(f"expected 2-D, got {g.shape}")
+    a, b, c = _NS_COEFFS
+    transpose = g.shape[0] > g.shape[1]
+    x = g.T if transpose else g                       # rows <= cols
+    x = x / (jnp.linalg.norm(x) + eps)
+
+    def body(_, x):
+        xxt = x @ x.T
+        return a * x + (b * xxt + c * (xxt @ xxt)) @ x
+
+    x = jax.lax.fori_loop(0, steps, body, x)
+    return x.T if transpose else x

@@ -1,0 +1,5 @@
+"""Serving substrate."""
+
+from repro.serving.engine import ServeEngine, serve_step
+
+__all__ = ["ServeEngine", "serve_step"]

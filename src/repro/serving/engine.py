@@ -1,0 +1,87 @@
+"""Serving engine: batched prefill + decode with greedy/temperature sampling.
+
+``serve_step`` (one new token against a full-length cache) is the function
+the decode_32k / long_500k dry-run cells lower.  The engine wraps it with
+cache management for actual generation (examples/serve_lm.py):
+
+    engine = ServeEngine(params, cfg, batch=8, max_len=1024)
+    out = engine.generate(prompt_tokens, steps=64)
+
+Batched requests decode in lock-step with per-request lengths (a length
+mask keeps ragged prompts correct); prefill pads to the batch maximum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_decode, forward_prefill, init_caches
+
+Array = jax.Array
+
+__all__ = ["ServeEngine", "serve_step"]
+
+
+def serve_step(params, tokens: Array, cfg: ModelConfig, caches, pos: Array):
+    """One decode step: (B,1) token ids + caches -> (B,1,V) logits + caches.
+
+    This is the exact callable the decode dry-run cells lower+compile."""
+    return forward_decode(params, tokens, cfg, caches, pos)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, batch: int, max_len: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: serve_step(p, t, cfg, c, pos))
+        self._prefill = jax.jit(lambda p, b: forward_prefill(p, b, cfg))
+
+    def _pad_caches(self, caches, prompt_len: int):
+        """Extend prefill KV caches to max_len rings."""
+        out = []
+        for entry in caches:
+            if "k" in entry:
+                pad = self.max_len - entry["k"].shape[2]
+                f = lambda a: jnp.pad(
+                    a, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                out.append({"k": f(entry["k"]), "v": f(entry["v"])})
+            else:
+                out.append(entry)
+        return tuple(out)
+
+    def _sample(self, logits: Array) -> Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+
+    def generate(self, prompt_tokens, steps: int,
+                 prompt_embeds: Optional[Array] = None) -> Array:
+        """prompt_tokens: (B, S0) int32. Returns (B, steps) generated ids."""
+        b, s0 = prompt_tokens.shape
+        assert b == self.batch and s0 + steps <= self.max_len
+        batch = ({"embeds": prompt_embeds} if self.cfg.embedding_input
+                 and prompt_embeds is not None
+                 else {"tokens": jnp.asarray(prompt_tokens)})
+        logits, caches = self._prefill(self.params, batch)   # (B, 1, V)
+        caches = self._pad_caches(caches, s0)
+        tok = self._sample(logits[:, 0])[:, None].astype(jnp.int32)
+        out = [tok]
+        pos = jnp.int32(s0)
+        for _ in range(steps - 1):
+            logits, caches = self._decode(self.params, tok, caches, pos)
+            tok = self._sample(logits[:, 0])[:, None].astype(jnp.int32)
+            out.append(tok)
+            pos = pos + 1
+        return jnp.concatenate(out, axis=1)

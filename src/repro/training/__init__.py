@@ -1,0 +1,9 @@
+"""Training loop substrate."""
+
+from repro.training.train_step import (
+    TrainConfig, TrainState, fused_lm_loss, init_train_state, make_train_step,
+)
+from repro.training.trainer import RunConfig, Trainer
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_train_state",
+           "fused_lm_loss", "Trainer", "RunConfig"]

@@ -1,0 +1,201 @@
+"""Training step: fused chunked LM loss, microbatch gradient accumulation,
+global-norm clipping, optional int8 error-feedback gradient compression,
+QR-Muon/AdamW update.
+
+Memory design (what lets the 32B+ cells fit 16 GB/chip at compile):
+  * the (B, S, V) logits tensor is never materialized — the LM head +
+    softmax-CE run fused over sequence chunks inside a scan;
+  * per-device batches are split into microbatches scanned with gradient
+    accumulation, so live activations are one microbatch deep;
+  * remat policy on the period body (model side) recomputes the rest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import ef_compress_tree, init_error_state
+from repro.distributed.sharding import constrain_logits
+from repro.models.layers import softcap as apply_softcap
+from repro.models.transformer import forward_hidden, lm_head_weight
+from repro.optim import adamw_init, adamw_update, muon_init, muon_update
+
+Array = jax.Array
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_train_state",
+           "fused_lm_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "muon-qr"      # "muon-qr" | "muon-ns" | "adamw"
+    lr: float = 0.02
+    weight_decay: float = 0.0
+    momentum: float = 0.95
+    grad_clip: float = 1.0
+    microbatch: int = 0             # per-call microbatch size; 0 = whole batch
+    grad_compression: bool = False
+    loss_chunk: int = 512           # fused-CE sequence chunk
+    qr_q_method: str = "formq"      # "formq" (paper) | "solve" (optimized)
+    qr_shard_leaves: bool = False   # layer-shard the QR stacks (see qr_muon)
+    cast_params_once: bool = False  # bf16-cast weights before the microbatch
+                                    # scan (halves FSDP gather bytes)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    ef_error: Any                   # error-feedback buffers (or 0-size)
+
+
+def fused_lm_loss(x: Array, head_w: Array, labels: Array,
+                  *, logit_softcap: Optional[float], chunk: int = 512
+                  ) -> Tuple[Array, Array]:
+    """Mean CE over (B, S) without materializing (B, S, V).
+
+    x: (B, S, d) hidden states; head_w: (d, V); labels: (B, S).
+    Returns (mean_nll, mean_accuracy)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        nll_sum, acc_sum = carry
+        xi, li = xs
+        logits = (xi @ head_w.astype(xi.dtype)).astype(jnp.float32)
+        logits = constrain_logits(logits)
+        logits = apply_softcap(logits, logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll_sum = nll_sum + jnp.sum(lse - ll)
+        acc_sum = acc_sum + jnp.sum(
+            (jnp.argmax(logits, axis=-1) == li).astype(jnp.float32))
+        return (nll_sum, acc_sum), None
+
+    (nll, acc), _ = lax.scan(body, (jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)), (xc, lc))
+    n = b * s
+    return nll / n, acc / n
+
+
+def _loss_fn(params, batch, model_cfg: ModelConfig, train_cfg: TrainConfig):
+    x, aux = forward_hidden(params, batch, model_cfg)
+    head = lm_head_weight(params, model_cfg)
+    nll, acc = fused_lm_loss(x, head, batch["labels"],
+                             logit_softcap=model_cfg.logit_softcap,
+                             chunk=train_cfg.loss_chunk)
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux, "accuracy": acc}
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def init_train_state(params, train_cfg: TrainConfig) -> TrainState:
+    if train_cfg.optimizer.startswith("muon"):
+        opt = muon_init(params)
+    elif train_cfg.optimizer == "adamw":
+        opt = adamw_init(params)
+    else:
+        raise ValueError(f"unknown optimizer {train_cfg.optimizer!r}")
+    ef = init_error_state(params) if train_cfg.grad_compression else \
+        jnp.zeros((), jnp.float32)
+    return TrainState(params=params, opt=opt, ef_error=ef)
+
+
+def _cast_params_tree(params):
+    """bf16-cast matrix weights ONCE per step (outside the microbatch
+    scan) so FSDP all-gathers move bf16, not fp32 — halves gather bytes.
+    1-D leaves (norm gains, biases) and a_log stay fp32 (used in fp32
+    math).  Gradients flow through the cast (vjp casts back)."""
+    import jax.numpy as _jnp
+
+    def cast(path, p):
+        names = [str(getattr(k, "key", k)) for k in path]
+        if p.dtype == _jnp.float32 and p.ndim >= 2 and "a_log" not in names:
+            return p.astype(_jnp.bfloat16)
+        return p
+
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    """Returns ``train_step(state, batch, lr) -> (state, metrics)``."""
+
+    def grads_and_metrics(params, batch):
+        if train_cfg.cast_params_once:
+            cast_fn = _cast_params_tree
+            def _loss_cast(p, b, mc, tc):
+                return _loss_fn(cast_fn(p), b, mc, tc)
+            loss_impl = _loss_cast
+        else:
+            loss_impl = _loss_fn
+        vg = jax.value_and_grad(loss_impl, has_aux=True)
+        mb = train_cfg.microbatch
+        b = batch["labels"].shape[0]
+        if mb <= 0 or mb >= b:
+            (loss, metrics), grads = vg(params, batch, model_cfg, train_cfg)
+            return loss, metrics, grads
+        if b % mb != 0:
+            raise ValueError(f"batch {b} not divisible by microbatch {mb}")
+        n_micro = b // mb
+        micro = jax.tree.map(
+            lambda a: a.reshape(n_micro, mb, *a.shape[1:]), batch)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+        zero_m = {"nll": 0.0, "aux": 0.0, "accuracy": 0.0}
+        zero_m = jax.tree.map(jnp.float32, zero_m)
+
+        def body(carry, mb_batch):
+            loss_a, metrics_a, grads_a = carry
+            (loss, metrics), grads = vg(params, mb_batch, model_cfg,
+                                        train_cfg)
+            grads_a = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / n_micro,
+                                   grads_a, grads)
+            metrics_a = jax.tree.map(lambda a, m: a + m / n_micro,
+                                     metrics_a, metrics)
+            return (loss_a + loss / n_micro, metrics_a, grads_a), None
+
+        (loss, metrics, grads), _ = lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_m, zero_g), micro)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch, lr):
+        loss, metrics, grads = grads_and_metrics(state.params, batch)
+        grads, gnorm = _clip_by_global_norm(grads, train_cfg.grad_clip)
+        ef = state.ef_error
+        if train_cfg.grad_compression:
+            grads, ef = ef_compress_tree(grads, ef)
+
+        if train_cfg.optimizer == "adamw":
+            params, opt = adamw_update(grads, state.opt, state.params, lr=lr,
+                                       weight_decay=train_cfg.weight_decay)
+        else:
+            method = "qr" if train_cfg.optimizer.endswith("qr") else "ns"
+            params, opt = muon_update(grads, state.opt, state.params, lr=lr,
+                                      momentum=train_cfg.momentum,
+                                      weight_decay=train_cfg.weight_decay,
+                                      method=method,
+                                      qr_q_method=train_cfg.qr_q_method,
+                                      qr_shard_leaves=train_cfg.qr_shard_leaves)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(params=params, opt=opt, ef_error=ef), metrics
+
+    return train_step

@@ -1,0 +1,150 @@
+"""Trainer: the fault-tolerant orchestration loop.
+
+Wires pipeline -> device placement (mesh shardings) -> train_step ->
+watchdog -> async checkpointing.  Restart-safe: `Trainer.run` resumes
+from the latest committed checkpoint (params, optimizer, data cursor) and
+reproduces the exact batch sequence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, make_pipeline
+from repro.distributed import MeshRules, StepWatchdog, batch_specs, param_specs, \
+    state_specs, tree_shardings
+from repro.models import init_params
+from repro.optim import warmup_cosine
+from repro.training.train_step import TrainConfig, TrainState, \
+    init_train_state, make_train_step
+
+__all__ = ["Trainer", "RunConfig"]
+
+
+@dataclasses.dataclass
+class RunConfig:
+    total_steps: int = 100
+    warmup_steps: int = 10
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig,
+                 run_cfg: RunConfig, data_cfg: DataConfig, *,
+                 mesh=None, rules: Optional[MeshRules] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.model_cfg = model_cfg
+        self.train_cfg = train_cfg
+        self.run_cfg = run_cfg
+        self.pipeline = make_pipeline(data_cfg)
+        self.mesh = mesh
+        self.rules = rules
+        self.log = log_fn
+        self.watchdog = StepWatchdog(
+            on_straggler=lambda s, dt, med: log_fn(
+                f"[watchdog] straggler step {s}: {dt:.2f}s vs median {med:.2f}s"))
+        self.ckpt = (CheckpointManager(run_cfg.checkpoint_dir)
+                     if run_cfg.checkpoint_dir else None)
+        self.metrics_history: list = []
+
+        key = jax.random.PRNGKey(run_cfg.seed)
+        params = init_params(key, model_cfg)
+        state = init_train_state(params, train_cfg)
+        if mesh is not None and rules is not None:
+            pspecs = param_specs(params, rules)
+            sspecs = TrainState(
+                params=pspecs,
+                opt=state_specs(params, pspecs, state.opt, rules),
+                ef_error=state_specs(params, pspecs, state.ef_error, rules),
+            )
+            shardings = tree_shardings(sspecs, mesh)
+            state = jax.device_put(state, shardings)
+            self._state_shardings = shardings
+        else:
+            self._state_shardings = None
+        self.state = state
+
+        step_fn = make_train_step(model_cfg, train_cfg)
+        if mesh is not None:
+            self._step = jax.jit(step_fn)
+        else:
+            self._step = jax.jit(step_fn)
+        self.step_idx = 0
+
+    # -------------------------------------------------------------- ckpt
+
+    def _save(self, blocking=False) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(self.step_idx, self.state,
+                       metadata={"data": self.pipeline.state_dict(),
+                                 "step": self.step_idx},
+                       blocking=blocking)
+
+    def maybe_restore(self) -> bool:
+        if self.ckpt is None:
+            return False
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        meta = self.ckpt.metadata(latest)
+        self.state = self.ckpt.restore(latest, self.state)
+        self.pipeline.load_state_dict(meta["data"])
+        self.step_idx = int(meta["step"])
+        self.log(f"[trainer] restored step {self.step_idx}")
+        return True
+
+    # --------------------------------------------------------------- run
+
+    def _place_batch(self, batch):
+        arrs = {k: jnp.asarray(v) for k, v in batch.items()}
+        if self.mesh is not None and self.rules is not None:
+            sh = tree_shardings(batch_specs(arrs, self.rules), self.mesh)
+            arrs = jax.device_put(arrs, sh)
+        return arrs
+
+    def run(self, *, resume: bool = True, stop_at: Optional[int] = None) -> dict:
+        """``stop_at`` ends the loop early (crash simulation / partial runs)
+        without changing the LR schedule horizon."""
+        if resume:
+            self.maybe_restore()
+        rc = self.run_cfg
+        it = iter(self.pipeline)
+        limit = rc.total_steps if stop_at is None else min(stop_at, rc.total_steps)
+        while self.step_idx < limit:
+            batch = self._place_batch(next(it))
+            lr = warmup_cosine(self.step_idx, peak_lr=self.train_cfg.lr,
+                               warmup_steps=rc.warmup_steps,
+                               total_steps=rc.total_steps)
+            self.watchdog.start()
+            self.state, metrics = self._step(self.state, batch, lr)
+            jax.block_until_ready(metrics["loss"])
+            dt = self.watchdog.stop(self.step_idx)
+            self.step_idx += 1
+            if self.step_idx % rc.log_every == 0 or self.step_idx == 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = self.step_idx
+                m["step_time_s"] = round(dt, 4)
+                self.metrics_history.append(m)
+                self.log(f"[trainer] step {self.step_idx} "
+                         f"loss={m['loss']:.4f} acc={m['accuracy']:.3f} "
+                         f"gnorm={m['grad_norm']:.2f} ({dt:.2f}s)")
+            if self.ckpt and self.step_idx % rc.checkpoint_every == 0:
+                self._save(blocking=False)
+        if self.ckpt:
+            self._save(blocking=True)
+            self.ckpt.wait_until_finished()
+        return {"final_step": self.step_idx,
+                "history": self.metrics_history,
+                "stragglers": self.watchdog.straggler_steps}

@@ -1,0 +1,41 @@
+"""Parallelism quantification tests — paper §4 eq. 6-10, fig 9."""
+
+from repro.core.dag import analyze_ht, analyze_mht, phase_model_theta, theta_curve
+
+
+def test_mht_dag_is_strictly_shallower():
+    """The fused macro-op removes the P-materialization levels (C2)."""
+    for n in (4, 8, 16, 32):
+        ht = analyze_ht(n)
+        mht = analyze_mht(n)
+        assert mht.depth < ht.depth, (n, mht.depth, ht.depth)
+
+
+def test_mht_has_fewer_ops_same_math():
+    """Explicit-P classical HT does O(L^2 w) work per column; MHT O(L w)."""
+    ht, mht = analyze_ht(16), analyze_mht(16)
+    assert mht.ops < ht.ops
+
+
+def test_theta_below_one_and_saturating():
+    rows = theta_curve((8, 16, 32, 64))["rows"]
+    thetas = [r["theta_levels"] for r in rows]
+    assert all(0.5 < t < 1.0 for t in thetas)
+    # equal-ops parallelism gain (paper eq 9/10) is > 1 for all sizes
+    assert all(r["beta_gain_equal_ops"] > 1.0 for r in rows)
+
+
+def test_width4_phase_model_matches_paper_constant():
+    """Under the paper's 4-wide RDP model, theta saturates at ~0.75
+    (paper fig 9 reports 0.749) and the parallelism gain at ~1.33x."""
+    big = phase_model_theta(512)
+    assert abs(big["theta"] - 0.75) < 0.02
+    assert abs(big["parallelism_gain"] - 4.0 / 3.0) < 0.04
+    # monotone approach to the asymptote
+    t = [phase_model_theta(n)["theta"] for n in (8, 32, 128, 512)]
+    assert all(a > b for a, b in zip(t, t[1:]))
+
+
+def test_phase_model_levels_positive_and_ordered():
+    pm = phase_model_theta(64)
+    assert 0 < pm["levels_mht"] < pm["levels_ht"]

@@ -1,0 +1,125 @@
+"""Launch-layer tests: mesh construction, input specs, a reduced-mesh
+dry-run (lower+compile+roofline terms) in a subprocess, HLO collective
+parsing, and the analytic cost model."""
+
+import json
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.roofline import analytic_cell_cost
+from repro.launch.specs import cell_is_skipped
+
+
+def test_long_500k_skip_policy():
+    runs = {a for a in ARCHS if cell_is_skipped(a, "long_500k") is None}
+    assert runs == {"jamba-v0.1-52b", "xlstm-1.3b"}
+    for a in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_is_skipped(a, s) is None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_analytic_cost_sane(arch):
+    cfg = get_config(arch)
+    train = analytic_cell_cost(cfg, SHAPES["train_4k"], "train")
+    dec = analytic_cell_cost(cfg, SHAPES["decode_32k"], "decode")
+    assert train.flops > train.model_flops > 0
+    assert 0.03 < train.model_flops / train.flops < 1.0
+    assert dec.flops < train.flops
+    assert train.params_active <= train.params_total
+    if cfg.moe is None:
+        assert train.params_active == train.params_total
+
+
+_DRYRUN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax
+    from repro.distributed.sharding import MeshRules, activation_policy, \\
+        tree_shardings
+    from repro.launch.specs import input_specs
+    from repro.launch.dryrun import collective_bytes, _memory_analysis_dict
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    rules = MeshRules(mesh=mesh, data_axes=("data",))
+    cell = input_specs("smollm-135m", "train_4k", rules,
+                       overrides=dict(n_layers=2, seq_chunk=256))
+    shardings = tuple(tree_shardings(s, mesh) for s in cell.in_specs)
+    with mesh, activation_policy(rules):
+        lowered = jax.jit(cell.step_fn, in_shardings=shardings).lower(
+            *cell.args_sds)
+        compiled = lowered.compile()
+        mem = _memory_analysis_dict(compiled)
+        coll = collective_bytes(compiled.as_text())
+    assert coll["total_weighted_bytes"] >= coll["total_bytes"] > 0
+    assert mem.get("temp_size_in_bytes", 1) > 0
+    print("DRYRUN_SMALL_OK", json.dumps(
+        {"weighted": coll["total_weighted_bytes"],
+         "static": coll["total_bytes"]}))
+""")
+
+
+def test_reduced_mesh_dryrun_subprocess():
+    """lower + compile + memory/cost/collective extraction on a small mesh
+    — exercises the exact dryrun.py code path used for the 512-chip run."""
+    res = subprocess.run(
+        [sys.executable, "-c", _DRYRUN_SCRIPT], capture_output=True,
+        text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd=__file__.rsplit("/", 2)[0])
+    assert "DRYRUN_SMALL_OK" in res.stdout, res.stderr[-3000:]
+
+
+def test_collective_parser_units():
+    from repro.launch.dryrun import _shape_bytes, collective_bytes
+
+    assert _shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _shape_bytes("(f32[8], s8[4])") == 36
+    hlo = textwrap.dedent("""
+        HloModule test
+
+        %body.1 (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+          %p = (s32[], f32[4]) parameter(0)
+          %ar = f32[4]{0} all-reduce(%gte), to_apply=%add.1
+          ROOT %t = (s32[], f32[4]) tuple(%i, %ar)
+        }
+
+        %cond.1 (p2: (s32[], f32[4])) -> pred[] {
+          %p2 = (s32[], f32[4]) parameter(0)
+          %c = s32[] constant(7)
+          %i2 = s32[] get-tuple-element(%p2), index=0
+          ROOT %cmp = pred[] compare(%i2, %c), direction=LT
+        }
+
+        ENTRY %main (a: f32[4]) -> f32[4] {
+          %a = f32[4]{0} parameter(0)
+          %ag = f32[16]{0} all-gather(%a), dimensions={0}
+          %w = (s32[], f32[4]) while(%init), condition=%cond.1, body=%body.1
+          ROOT %out = f32[4]{0} get-tuple-element(%w), index=1
+        }
+    """)
+    c = collective_bytes(hlo)
+    assert c["bytes"]["all-gather"] == 64
+    assert c["bytes"]["all-reduce"] == 16
+    # weighted: the loop body all-reduce executes 7x
+    assert c["weighted_bytes"]["all-reduce"] == 7 * 16
+    assert c["weighted_bytes"]["all-gather"] == 64
+
+
+def test_make_production_mesh_requires_512():
+    """On the 1-device test process the production mesh must refuse —
+    proving tests never see the forced 512-device config."""
+    import jax
+
+    from repro.launch.mesh import make_production_mesh
+
+    if len(jax.devices()) >= 512:  # pragma: no cover
+        pytest.skip("running inside a dry-run environment")
+    with pytest.raises(ValueError):
+        make_production_mesh()
