@@ -8,15 +8,15 @@ host (algorithmic comparison; the TPU story is the §Roofline analysis).
 QR FLOPs: 2 m n^2 - (2/3) n^3.
 """
 
+import functools
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import geqr2, geqr2_ht, geqrf
-from repro.core.blocked import geqrf_fori
 from repro.core.householder import geqr2_explicit_p
+from repro.core.plan import QRConfig, plan
 
 
 def _qr_flops(m, n):
@@ -33,16 +33,27 @@ def _time(fn, a, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
+@functools.lru_cache(maxsize=None)
+def _solver(method: str, shape, dtype: str):
+    return plan(shape, dtype, QRConfig(method=method, block=32, use_kernel=False))
+
+
+def _registry_factor(method: str):
+    """Packed factorization through the planner — the solver is memoized
+    per (method, shape) so re-planning stays out of the timed region."""
+    return lambda a: _solver(method, a.shape, str(a.dtype)).factor(a)
+
+
 def run() -> list:
     rng = np.random.default_rng(0)
     rows = []
     variants = [
-        ("DGEQR2", lambda a: geqr2(a)),
-        ("DGEQR2HT", lambda a: geqr2_ht(a)),
+        ("DGEQR2", _registry_factor("geqr2")),
+        ("DGEQR2HT", _registry_factor("geqr2_ht")),
         ("DGEQR2_explicitP", lambda a: geqr2_explicit_p(a)),
-        ("DGEQRF", lambda a: geqrf(a, block=32, panel_method="ht")),
-        ("DGEQRFHT", lambda a: geqrf(a, block=32, panel_method="mht")),
-        ("DGEQRFHT_fori", lambda a: geqrf_fori(a, block=32)),
+        ("DGEQRF", _registry_factor("geqrf")),
+        ("DGEQRFHT", _registry_factor("geqrf_ht")),
+        ("DGEQRFHT_fori", _registry_factor("geqrf_fori")),
     ]
     for (m, n) in [(256, 256), (512, 256)]:
         a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)

@@ -8,7 +8,7 @@ using the MHT-based factorization.  Validates against numpy.linalg.eigh.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import qr_algorithm_eig
+from repro.core import QRConfig, qr_algorithm_eig
 
 
 def main():
@@ -17,7 +17,7 @@ def main():
     lam = np.sort(rng.uniform(0.5, 10.0, 12))[::-1]
     a = jnp.asarray(qm @ np.diag(lam) @ qm.T, jnp.float32)
 
-    ev = qr_algorithm_eig(a, iters=400, method="geqrf_ht")
+    ev = qr_algorithm_eig(a, iters=400, config=QRConfig(method="geqrf_ht"))
     ref = np.sort(np.linalg.eigvalsh(np.asarray(a)))[::-1]
     err = np.abs(np.asarray(ev) - ref).max()
     print("QR-algorithm eigenvalues:", np.round(np.asarray(ev), 3))

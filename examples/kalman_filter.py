@@ -9,7 +9,10 @@ updates).  Compares against a naive covariance EKF on conditioning.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import qr
+from repro.core import QRConfig, qr
+
+# R-only blocked-MHT factorization, planned once for the whole filter run.
+R_CFG = QRConfig(method="geqrf_ht", mode="r")
 
 
 def main():
@@ -34,7 +37,7 @@ def main():
 
         # --- time update: S' = R factor of [S F^T; Q^T]  (QR propagation)
         pre = jnp.vstack([s @ f.T, q_sqrt])
-        s = qr(pre, method="geqrf_ht", mode="r")[:4, :4]
+        s = qr(pre, config=R_CFG)[:4, :4]
         x_est = f @ x_est
 
         # --- measurement update via the QR of the augmented array
@@ -42,7 +45,7 @@ def main():
         top = jnp.hstack([r_sqrt, h @ s.T @ s @ h.T * 0])  # layout helper
         aug = jnp.block([[r_sqrt, jnp.zeros((m, n))],
                          [s @ h.T, s]])
-        r_all = qr(aug, method="geqrf_ht", mode="r")
+        r_all = qr(aug, config=R_CFG)
         s_zz = r_all[:m, :m]
         k_gain_t = r_all[:m, m:]
         s = r_all[m:, m:]

@@ -1,41 +1,67 @@
 """Quickstart: the MHT QR library in five minutes.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The one idea to take away: factorizations are *planned*.  A hashable
+``QRConfig`` names what you want (or ``method="auto"`` to let the planner
+route by shape/hardware), ``plan()`` resolves it against the method
+registry, and the returned ``QRSolver`` does the work — batched, jittable,
+kernel-dispatched.
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import qr, orthogonalize, lstsq
+from repro.core import QRConfig, lstsq, orthogonalize, plan, qr
 from repro.core.dag import phase_model_theta, theta_curve
+from repro.core.plan import available_methods, get_method
 
 
 def main():
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((512, 128)), jnp.float32)
 
-    # 1. QR with every realization the paper discusses
-    for method in ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr"):
-        q, r = qr(a, method=method)
+    # 1. every realization the paper discusses, via the method registry
+    for method in available_methods():
+        if method == "geqrf_fori":
+            continue  # optimizer-internal variant (needs padded shapes)
+        q, r = qr(a, config=QRConfig(method=method))
         rec = float(jnp.linalg.norm(q @ r - a) / jnp.linalg.norm(a))
         orth = float(jnp.linalg.norm(q.T @ q - jnp.eye(q.shape[1])))
-        print(f"{method:10s} reconstruction={rec:.2e} orthogonality={orth:.2e}")
+        print(f"{method:10s} reconstruction={rec:.2e} orthogonality={orth:.2e}"
+              f"   [{get_method(method).description}]")
 
-    # 2. the Pallas-kernel-backed blocked MHT (interpret mode on CPU)
-    q, r = qr(a, method="geqrf_ht", use_kernel=True, block=64)
+    # 2. method="auto": the planner routes by shape and hardware.
+    #    Tall-skinny goes to TSQR with a planner-chosen tree; on TPU,
+    #    panel-fits-VMEM shapes go to the kernel-backed blocked MHT.
+    for shape in [(1024, 32), (512, 128), (24, 16)]:
+        solver = plan(shape, jnp.float32, QRConfig())
+        print(f"auto {shape}: -> {solver.config.method}"
+              f" (use_kernel={solver.config.use_kernel},"
+              f" nblocks={solver.config.nblocks})")
+
+    # 3. the Pallas-kernel-backed blocked MHT (interpret mode on CPU)
+    q, r = qr(a, config=QRConfig(method="geqrf_ht", use_kernel=True, block=64))
     print(f"{'kernels':10s} reconstruction="
           f"{float(jnp.linalg.norm(q @ r - a) / jnp.linalg.norm(a)):.2e}")
 
-    # 3. the optimizer primitive: orthogonalize a momentum matrix
-    o = orthogonalize(jnp.asarray(rng.standard_normal((256, 64)), jnp.float32))
+    # 4. batched QR: leading dims vmap through the same solver
+    stack = jnp.asarray(rng.standard_normal((4, 64, 32)), jnp.float32)
+    qs, rs = qr(stack, config=QRConfig(method="geqrf_ht", block=16))
+    print("batched:", qs.shape, rs.shape)
+
+    # 5. the optimizer primitive: orthogonalize a momentum matrix
+    #    (auto config routes this tall-skinny input through TSQR)
+    o = orthogonalize(jnp.asarray(rng.standard_normal((256, 64)), jnp.float32),
+                      config=QRConfig())
     print("orthogonalize:", o.shape,
           float(jnp.linalg.norm(o.T @ o - jnp.eye(64))))
 
-    # 4. least squares (Kalman-filter building block, paper §1)
-    x = lstsq(a, a @ jnp.ones((128,), jnp.float32))
+    # 6. least squares (Kalman-filter building block, paper §1)
+    x = lstsq(a, a @ jnp.ones((128,), jnp.float32), config=QRConfig())
     print("lstsq residual:", float(jnp.linalg.norm(x - 1.0)))
 
-    # 5. the paper's parallelism claim (fig 9)
+    # 7. the paper's parallelism claim (fig 9)
     print("theta (4-wide RDP model, n=512):",
           round(phase_model_theta(512)["theta"], 4), "~ paper 0.749")
 

@@ -1,0 +1,24 @@
+"""Small jax-version compatibility helpers shared across the library."""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+__all__ = ["axis_size", "shard_map"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pre-0.6 jax keeps it in experimental
+    from jax.experimental.shard_map import shard_map
+
+
+def axis_size(axis_name) -> int:
+    """Static mesh-axis size from inside shard_map (jax-version compat:
+    ``lax.axis_size`` only exists on newer jax)."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    from jax import core as _core
+
+    frame = _core.axis_frame(axis_name)
+    return frame if isinstance(frame, int) else frame.size

@@ -1,133 +1,146 @@
-"""Public QR API — the paper's contribution as a composable JAX module.
+"""Public QR API — thin wrappers over the :mod:`repro.core.plan` planner.
 
-    qr(a, method=...)          -> (Q, R)  or R
-    orthogonalize(m)           -> sign-fixed thin Q (optimizer primitive)
-    lstsq(a, b)                -> QR-based least-squares solve
-    qr_algorithm_eig(a, iters) -> eigenvalues via the QR algorithm (paper §1 App. 2)
+    qr(a, config=QRConfig(...))  -> (Q, R) or R       (batched: a.ndim >= 2)
+    orthogonalize(m)             -> sign-fixed thin Q (optimizer primitive)
+    lstsq(a, b)                  -> QR-based least-squares solve
+    qr_algorithm_eig(a, iters)   -> eigenvalues via the QR algorithm (§1 App. 2)
 
-Methods:
+Every realization lives in the method registry (see
+:func:`repro.core.plan.available_methods`); the built-ins:
+
     "geqr2"      classical HT, two-pass updates          (LAPACK_DGEQR2)
     "geqr2_ht"   MHT, fused macro-op updates             (LAPACK_DGEQR2HT)
     "geqrf"      blocked WY, classical HT panels         (LAPACK_DGEQRF)
-    "geqrf_ht"   blocked WY, MHT panels [default]        (LAPACK_DGEQRFHT)
+    "geqrf_ht"   blocked WY, MHT panels                  (LAPACK_DGEQRFHT)
+    "geqrf_fori" blocked MHT, fori_loop panels           (optimizer path)
     "tsqr"       tall-skinny tree QR (single device)
-Kernel-backed variants run the Pallas mht_panel / wy_trailing kernels
-(``use_kernel=True``; interpret-mode on CPU).
+    "auto"       planner heuristics: tall-skinny => tsqr, panel-fits-VMEM
+                 on TPU => kernel-backed geqrf_ht, single panel => geqr2_ht
+
+Selection, batching (vmap over leading dims), and the Pallas kernel
+policy (``use_kernel=None`` => compiled on TPU when the panel fits VMEM,
+interpret-mode available on CPU) are all decided by
+``plan(shape, dtype, config) -> QRSolver``; prefer holding a solver when
+factorizing many same-shaped matrices.
+
+Legacy string kwargs (``method=``/``block=``/``use_kernel=``) are kept as
+a deprecation shim and route through the same planner.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+import warnings
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocked, householder, mht, tsqr as tsqr_mod
+from repro.core.plan import QRConfig, plan
 
 Array = jax.Array
 
-__all__ = ["qr", "orthogonalize", "lstsq", "qr_algorithm_eig", "METHODS"]
+__all__ = ["qr", "orthogonalize", "lstsq", "qr_algorithm_eig", "METHODS",
+           "QRConfig", "plan"]
 
+# Legacy constant (pre-registry); the registry is the source of truth now.
 METHODS = ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr")
 
+_LEGACY = dict(method="geqrf_ht", mode="reduced", block=32, use_kernel=False)
 
-def _factor(a: Array, method: str, block: int, use_kernel: bool):
-    if method == "geqr2":
-        return householder.geqr2(a)
-    if method == "geqr2_ht":
-        if use_kernel:
-            from repro.kernels import ops
 
-            return ops.mht_panel(a, row0=0)
-        return mht.geqr2_ht(a)
-    if method == "geqrf":
-        return blocked.geqrf(a, block=block, panel_method="ht", use_kernel=False)
-    if method == "geqrf_ht":
-        return blocked.geqrf(a, block=block, panel_method="mht", use_kernel=use_kernel)
-    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+def _shim_config(config: Optional[QRConfig], method, mode, block, use_kernel,
+                 nblocks=None, *, sign_fix: bool = False) -> QRConfig:
+    """Build a QRConfig from legacy string kwargs (deprecation shim).
+
+    ``config`` is the new-style path and excludes every legacy kwarg.
+    Without it, legacy defaults apply (``geqrf_ht``, block 32, no kernel)
+    so pre-registry callers see bit-identical behavior.
+    """
+    if config is not None:
+        if any(v is not None for v in (method, mode, block, use_kernel, nblocks)):
+            raise ValueError(
+                "pass either config=QRConfig(...) or legacy kwargs, not both")
+        return config.replace(sign_fix=sign_fix) if sign_fix else config
+    if any(v is not None for v in (method, block, use_kernel, nblocks)):
+        warnings.warn(
+            "string-dispatch qr kwargs (method=/block=/use_kernel=/nblocks=) "
+            "are deprecated; pass config=repro.core.QRConfig(...) instead",
+            DeprecationWarning, stacklevel=3)
+    return QRConfig(
+        method=_LEGACY["method"] if method is None else method,
+        mode=_LEGACY["mode"] if mode is None else mode,
+        block=_LEGACY["block"] if block is None else block,
+        use_kernel=_LEGACY["use_kernel"] if use_kernel is None else use_kernel,
+        nblocks=nblocks,
+        sign_fix=sign_fix,
+    )
 
 
 def qr(
     a: Array,
     *,
-    method: str = "geqrf_ht",
-    mode: str = "reduced",
-    block: int = 32,
-    use_kernel: bool = False,
+    config: Optional[QRConfig] = None,
+    method: Optional[str] = None,
+    mode: Optional[str] = None,
+    block: Optional[int] = None,
+    use_kernel: Optional[bool] = None,
+    nblocks: Optional[int] = None,
 ) -> Tuple[Array, Array] | Array:
-    """QR factorization with selectable HT/MHT realization.
+    """QR factorization with a registry-selected HT/MHT realization.
 
-    mode: "reduced" -> (Q thin m x k, R k x n); "r" -> R only;
-          "full" -> (Q m x m, R m x n).
+    ``config.mode``: "reduced" -> (Q thin m x k, R k x n); "r" -> R only;
+    "full" -> (Q m x m, R m x n).  Inputs with leading batch dims
+    (``a.ndim > 2``) are factorized batch-wise via the solver's vmap rule.
     """
-    if a.ndim != 2:
+    if a.ndim < 2:
         raise ValueError(f"qr expects a matrix, got shape {a.shape}")
-    m, n = a.shape
-    k = min(m, n)
-
-    if method == "tsqr":
-        if m < 4 * n:
-            raise ValueError("tsqr expects tall-skinny input (m >= 4n)")
-        nb = max(2, min(8, m // max(n, 1)))
-        while m % nb != 0:
-            nb -= 1
-        if mode == "r":
-            return tsqr_mod.tsqr_r(a, nblocks=nb)
-        q, r = tsqr_mod.tsqr_qr(a, nblocks=nb)
-        if mode == "full":
-            raise ValueError("tsqr produces thin Q only")
-        return q, r
-
-    packed, taus = _factor(a, method, block, use_kernel)
-    r = householder.unpack_r(packed, n)
-    if mode == "r":
-        return r
-    if mode == "reduced":
-        q = householder.form_q(packed, taus)  # (m, k)
-        return q, r
-    if mode == "full":
-        q = householder.form_q(packed, taus, full=True)
-        return q, jnp.vstack([r, jnp.zeros((m - k, n), a.dtype)]) if m > k else (q, r)
-    raise ValueError(f"unknown mode {mode!r}")
+    cfg = _shim_config(config, method, mode, block, use_kernel, nblocks)
+    return plan(a.shape, a.dtype, cfg).solve(a)
 
 
-def orthogonalize(m_in: Array, *, method: str = "geqrf_ht", block: int = 32,
-                  use_kernel: bool = False) -> Array:
+def orthogonalize(m_in: Array, *, config: Optional[QRConfig] = None,
+                  method: Optional[str] = None, block: Optional[int] = None,
+                  use_kernel: Optional[bool] = None) -> Array:
     """Nearest-column-space orthonormal factor via QR with sign fixing.
 
     Returns Q * diag(sign(diag(R))) so the result is a deterministic,
     continuous function of the input (the optimizer primitive; wide
-    matrices are handled by factorizing the transpose)."""
-    transpose = m_in.shape[0] < m_in.shape[1]
-    a = m_in.T if transpose else m_in
-    q, r = qr(a, method=method, mode="reduced", block=block, use_kernel=use_kernel)
-    signs = jnp.where(jnp.diagonal(r) >= 0, 1.0, -1.0).astype(q.dtype)
-    q = q * signs[None, :]
-    return q.T if transpose else q
+    matrices are handled by factorizing the transpose).  With
+    ``config=QRConfig()`` (method "auto") tall-skinny momentum routes
+    through TSQR."""
+    if m_in.ndim < 2:
+        raise ValueError(f"orthogonalize expects a matrix, got shape {m_in.shape}")
+    cfg = _shim_config(config, method, None, block, use_kernel, sign_fix=True)
+    cfg = cfg.replace(mode="reduced")
+    transpose = m_in.shape[-2] < m_in.shape[-1]
+    a = jnp.swapaxes(m_in, -1, -2) if transpose else m_in
+    q = plan(a.shape, a.dtype, cfg).orthogonalize(a)
+    return jnp.swapaxes(q, -1, -2) if transpose else q
 
 
-def lstsq(a: Array, b: Array, *, method: str = "geqrf_ht", block: int = 32) -> Array:
+def lstsq(a: Array, b: Array, *, config: Optional[QRConfig] = None,
+          method: Optional[str] = None, block: Optional[int] = None) -> Array:
     """Least-squares solve ``min ||a x - b||`` via QR (m >= n).
 
     x = R^{-1} Q^T b — the numerically stable path the paper motivates for
-    Kalman filtering (§1, Application 1)."""
-    m, n = a.shape
-    if m < n:
-        raise ValueError("lstsq expects m >= n")
-    packed, taus = _factor(a, method, block, use_kernel=False)
-    qtb = householder.apply_q(packed, taus, b if b.ndim == 2 else b[:, None],
-                              transpose=True)
-    r = householder.unpack_r(packed, n)[:n, :n]
-    x = jax.scipy.linalg.solve_triangular(r, qtb[:n], lower=False)
-    return x[:, 0] if b.ndim == 1 else x
+    Kalman filtering (§1, Application 1).  With ``config=QRConfig()``
+    tall-skinny systems route through TSQR."""
+    cfg = _shim_config(config, method, None, block, None)
+    cfg = cfg.replace(mode="reduced", sign_fix=False)
+    return plan(a.shape, a.dtype, cfg).lstsq(a, b)
 
 
-def qr_algorithm_eig(a: Array, *, iters: int = 200, method: str = "geqrf_ht") -> Array:
+def qr_algorithm_eig(a: Array, *, iters: int = 200,
+                     config: Optional[QRConfig] = None,
+                     method: Optional[str] = None) -> Array:
     """Eigenvalues of symmetric ``a`` via the (unshifted) QR algorithm —
     paper §1 Application 2, Algorithm 1:  A_{k} = R_k Q_k."""
+    cfg = _shim_config(config, method, None, None, None)
+    cfg = cfg.replace(mode="reduced", sign_fix=False)
+    solver = plan(a.shape, a.dtype, cfg)
 
     def body(_, ak):
-        q, r = qr(ak, method=method, mode="reduced")
+        q, r = solver.solve(ak)
         return r @ q
 
     ak = jax.lax.fori_loop(0, iters, body, a)

@@ -192,3 +192,48 @@ def geqrf(
         j0 += bw
 
     return a, taus
+
+
+# -- registry -----------------------------------------------------------------
+from repro.core.plan import MethodSpec, QRConfig, register_method  # noqa: E402
+
+
+def _vmem_geqrf_panel(m: int, n: int, cfg: QRConfig) -> int:
+    """Working set of the widest VMEM-resident panel on the kernel path."""
+    from repro.kernels import ops
+
+    return ops.vmem_bytes_mht_panel(m, min(cfg.block, n))
+
+
+register_method(MethodSpec(
+    name="geqrf",
+    factor=lambda a, cfg: geqrf(a, block=cfg.block, panel_method="ht",
+                                use_kernel=False),
+    description="blocked WY, classical HT panels (LAPACK DGEQRF)",
+))
+
+register_method(MethodSpec(
+    name="geqrf_ht",
+    factor=lambda a, cfg: geqrf(a, block=cfg.block, panel_method="mht",
+                                use_kernel=bool(cfg.use_kernel)),
+    kernel_backed=True,
+    vmem_bytes=_vmem_geqrf_panel,
+    description="blocked WY, MHT panels (LAPACK DGEQRFHT) [default]",
+))
+
+
+def _resolve_geqrf_fori(m: int, n: int, cfg: QRConfig) -> QRConfig:
+    k = min(m, n)
+    if k % cfg.block != 0:
+        raise ValueError(
+            f"geqrf_fori needs min(m,n) divisible by block "
+            f"(got {m}x{n}, block={cfg.block}); callers pad")
+    return cfg
+
+
+register_method(MethodSpec(
+    name="geqrf_fori",
+    factor=lambda a, cfg: geqrf_fori(a, block=cfg.block),
+    resolve=_resolve_geqrf_fori,
+    description="blocked MHT with fori_loop panels — O(1)-HLO optimizer path",
+))

@@ -236,3 +236,13 @@ def form_q(packed: Array, taus: Array, *, full: bool = False) -> Array:
     cols = m if full else k
     eye = jnp.eye(m, cols, dtype=packed.dtype)
     return apply_q(packed, taus, eye)
+
+
+# -- registry -----------------------------------------------------------------
+from repro.core.plan import MethodSpec, register_method  # noqa: E402
+
+register_method(MethodSpec(
+    name="geqr2",
+    factor=lambda a, cfg: geqr2(a),
+    description="classical HT, two-pass updates (LAPACK DGEQR2)",
+))

@@ -94,3 +94,31 @@ def geqr2_ht_batched(a: Array) -> Tuple[Array, Array]:
     factor as E independent QRs.
     """
     return jax.vmap(lambda x: geqr2_ht(x))(a)
+
+
+# -- registry -----------------------------------------------------------------
+from repro.core.plan import MethodSpec, QRConfig, register_method  # noqa: E402
+
+
+def _factor_geqr2_ht(a: Array, cfg: QRConfig) -> Tuple[Array, Array]:
+    if cfg.use_kernel:
+        from repro.kernels import ops  # lazy: kernels.ref imports core
+
+        return ops.mht_panel(a, row0=0)
+    return geqr2_ht(a)
+
+
+def _vmem_geqr2_ht(m: int, n: int, cfg: QRConfig) -> int:
+    # The whole matrix is one VMEM-resident panel on the kernel path.
+    from repro.kernels import ops
+
+    return ops.vmem_bytes_mht_panel(m, n)
+
+
+register_method(MethodSpec(
+    name="geqr2_ht",
+    factor=_factor_geqr2_ht,
+    kernel_backed=True,
+    vmem_bytes=_vmem_geqr2_ht,
+    description="MHT, fused macro-op updates (LAPACK DGEQR2HT)",
+))

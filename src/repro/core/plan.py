@@ -1,0 +1,447 @@
+"""repro.core.plan — typed QR planning: QRConfig, method registry, QRSolver.
+
+The paper's contribution is a *family* of QR realizations (HT, MHT,
+blocked WY, TSQR, Pallas kernel-backed variants) whose relative merit
+depends on shape, aspect ratio, and hardware.  This module centralizes
+that selection problem once, instead of string dispatch scattered across
+call sites:
+
+  * :class:`QRConfig` — a frozen, hashable description of *how* to
+    factorize (method, block size, kernel policy, precision, sign fixing,
+    Q mode).  Safe to use as a ``jax.jit`` static argument.
+  * a **method registry** — every realization registers capability
+    metadata (:class:`MethodSpec`) via :func:`register_method`;
+    :mod:`repro.core.householder`, :mod:`repro.core.mht`,
+    :mod:`repro.core.blocked`, :mod:`repro.core.tsqr` and
+    :mod:`repro.kernels.ops` self-register at import.  New backends plug
+    in here instead of growing another ``if method == ...`` chain.
+  * :func:`plan` — resolve ``(shape, dtype, config)`` to a concrete
+    :class:`QRSolver`, applying the ``method="auto"`` heuristics
+    (tall-skinny => TSQR with planner-chosen ``nblocks``,
+    panel-fits-VMEM on TPU => kernel-backed ``geqrf_ht``, single-panel
+    problems => unblocked MHT) and the kernel dispatch policy.
+  * :class:`QRSolver` — ``solve`` / ``factor`` / ``lstsq`` on concrete
+    shapes, with batched inputs (``a.ndim > 2``) handled by a vmap rule.
+
+:mod:`repro.core.api` provides the thin user-facing wrappers
+(``qr`` / ``orthogonalize`` / ``lstsq`` / ``qr_algorithm_eig``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+__all__ = [
+    "QRConfig",
+    "MethodSpec",
+    "KernelPolicy",
+    "QRSolver",
+    "plan",
+    "select_method",
+    "register_method",
+    "unregister_method",
+    "register_kernel_policy",
+    "get_method",
+    "available_methods",
+    "kernel_vmem_budget",
+    "sign_fix_qr",
+    "sign_fix_r",
+]
+
+_MODES = ("reduced", "r", "full")
+_Q_METHODS = ("formq", "solve")
+
+# Fallback when no kernel backend registered a policy (mirrors kernels.ops).
+_DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class QRConfig:
+    """Hashable description of a QR realization (``jax.jit``-static safe).
+
+    Fields left at their "decide for me" default (``method="auto"``,
+    ``use_kernel=None``, ``nblocks=None``) are resolved by :func:`plan`
+    into concrete values on the returned solver's ``config``.
+
+    method:     registry name, or ``"auto"`` for shape/hardware heuristics
+    block:      WY panel width for blocked methods (local QR block in TSQR)
+    use_kernel: Pallas kernel policy — True force, False never,
+                None => auto (TPU and the panel working set fits VMEM)
+    nblocks:    TSQR tree leaf count; None => planner picks a divisor of m
+    precision:  optional compute-dtype override, e.g. ``"float32"``
+    sign_fix:   multiply Q columns (and R rows) by sign(diag R) so the
+                factor is a deterministic, continuous function of the input
+    mode:       Q mode — "reduced" (thin Q, R), "r" (R only), "full"
+    q_method:   how thin Q materializes — "formq" (reflector accumulation,
+                exact even for singular input) or "solve" (Q = A R^{-1},
+                one dense op; tall matrices only)
+    refine:     CQR2-style second pass for TSQR thin-Q orthogonality
+    """
+
+    method: str = "auto"
+    block: int = 32
+    use_kernel: Optional[bool] = None
+    nblocks: Optional[int] = None
+    precision: Optional[str] = None
+    sign_fix: bool = False
+    mode: str = "reduced"
+    q_method: str = "formq"
+    refine: bool = True
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; expected one of {_MODES}")
+        if self.q_method not in _Q_METHODS:
+            raise ValueError(
+                f"unknown q_method {self.q_method!r}; expected one of {_Q_METHODS}")
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+        if self.nblocks is not None and self.nblocks < 1:
+            raise ValueError(f"nblocks must be >= 1, got {self.nblocks}")
+
+    def replace(self, **changes) -> "QRConfig":
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """Capability metadata + entry points for one registered realization.
+
+    factor:  ``(a, cfg) -> (packed, taus)`` in LAPACK packed layout, or
+             None when the method has no packed form (e.g. TSQR).
+    solve:   ``(a, cfg) -> (q, r) | r`` honoring cfg.mode/sign_fix; when
+             None the planner derives it from ``factor``.
+    resolve: optional ``(m, n, cfg) -> cfg`` hook filling method-specific
+             fields (TSQR uses it to pick ``nblocks``).
+    vmem_bytes: optional ``(m, n, cfg) -> bytes`` working-set estimator
+             used by the kernel dispatch policy.
+    min_aspect: required m/n ratio (TSQR needs tall-skinny input).
+    """
+
+    name: str
+    factor: Optional[Callable] = None
+    solve: Optional[Callable] = None
+    resolve: Optional[Callable] = None
+    supports_full_q: bool = True
+    min_aspect: float = 0.0
+    batched: bool = True
+    kernel_backed: bool = False
+    vmem_bytes: Optional[Callable] = None
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Dispatch policy registered by a kernel backend (kernels.ops)."""
+
+    name: str
+    vmem_bytes: Callable  # (m, b) -> working-set bytes
+    vmem_budget: int
+    default_interpret: Optional[Callable] = None  # () -> bool
+
+
+_REGISTRY: Dict[str, MethodSpec] = {}
+_KERNEL_POLICIES: Dict[str, KernelPolicy] = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    """Import the built-in realizations so they self-register.
+
+    Registration happens at module import (each module calls
+    :func:`register_method` at its bottom); this just guarantees the
+    imports happened before a lookup, whatever the caller imported first.
+    """
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
+    _BUILTINS_LOADED = True
+    import repro.core.householder  # noqa: F401
+    import repro.core.mht  # noqa: F401
+    import repro.core.blocked  # noqa: F401
+    import repro.core.tsqr  # noqa: F401
+    try:
+        import repro.kernels.ops  # noqa: F401  (kernel policy registration)
+    except ImportError:  # Pallas toolchain unavailable — jnp paths only.
+        pass
+
+
+def register_method(spec: MethodSpec) -> MethodSpec:
+    """Register (or overwrite) a realization under ``spec.name``."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister_method(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def register_kernel_policy(policy: KernelPolicy) -> KernelPolicy:
+    _KERNEL_POLICIES[policy.name] = policy
+    return policy
+
+
+def get_method(name: str) -> MethodSpec:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; expected one of {available_methods()}"
+        ) from None
+
+
+def available_methods() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def kernel_vmem_budget() -> int:
+    pol = _KERNEL_POLICIES.get("mht_panel")
+    return pol.vmem_budget if pol is not None else _DEFAULT_VMEM_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# sign fixing (shared by the default solve path and TSQR)
+# ---------------------------------------------------------------------------
+
+def _pad_signs(signs: Array, size: int, dtype) -> Array:
+    if size == signs.shape[0]:
+        return signs.astype(dtype)
+    return jnp.concatenate(
+        [signs.astype(dtype), jnp.ones((size - signs.shape[0],), dtype)])
+
+
+def sign_fix_qr(q: Array, r: Array) -> Tuple[Array, Array]:
+    """Flip Q columns / R rows so diag(R) >= 0 (Q R product unchanged)."""
+    signs = jnp.where(jnp.diagonal(r) >= 0, 1.0, -1.0)
+    q = q * _pad_signs(signs, q.shape[1], q.dtype)[None, :]
+    r = r * _pad_signs(signs, r.shape[0], r.dtype)[:, None]
+    return q, r
+
+
+def sign_fix_r(r: Array) -> Array:
+    signs = jnp.where(jnp.diagonal(r) >= 0, 1.0, -1.0)
+    return r * _pad_signs(signs, r.shape[0], r.dtype)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+def _kernel_fits(spec: MethodSpec, m: int, n: int, cfg: QRConfig,
+                 dtype=jnp.float32) -> bool:
+    if spec.vmem_bytes is None:
+        return False
+    try:
+        est = spec.vmem_bytes(m, n, cfg)
+    except ImportError:  # kernel backend unavailable — jnp paths only
+        return False
+    # Estimators are written for fp32; scale to the planned element width.
+    scale = np.dtype(dtype).itemsize / 4.0
+    return est * scale <= kernel_vmem_budget()
+
+
+def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = None
+                  ) -> str:
+    """The ``method="auto"`` routing table (trailing two dims of shape).
+
+    1. tall-skinny (aspect >= tsqr's min_aspect, default 4:1) -> TSQR,
+       with ``nblocks`` chosen by the planner;
+    2. TPU and the geqrf_ht panel working set fits VMEM -> kernel-backed
+       ``geqrf_ht``;
+    3. single-panel problems (min(m, n) <= block) -> unblocked ``geqr2_ht``;
+    4. otherwise blocked ``geqrf_ht``.
+    """
+    _ensure_builtins()
+    if config.method != "auto":
+        return config.method
+    m, n = int(shape[-2]), int(shape[-1])
+    backend = jax.default_backend() if backend is None else backend
+    tspec = _REGISTRY.get("tsqr")
+    if (tspec is not None and config.mode != "full" and n >= 1 and m >= 8
+            and m >= tspec.min_aspect * n):
+        return "tsqr"
+    gspec = _REGISTRY.get("geqrf_ht")
+    if (backend == "tpu" and gspec is not None and config.use_kernel is not False
+            and _kernel_fits(gspec, m, n, config, dtype)):
+        return "geqrf_ht"
+    if min(m, n) <= config.block:
+        return "geqr2_ht"
+    return "geqrf_ht"
+
+
+def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
+         backend: Optional[str] = None) -> "QRSolver":
+    """Resolve ``(shape, dtype, config)`` to a concrete :class:`QRSolver`.
+
+    ``shape`` may carry leading batch dims; planning uses the trailing
+    matrix dims and the solver vmaps over the rest.  ``backend`` overrides
+    ``jax.default_backend()`` for the kernel policy (useful in tests).
+    """
+    _ensure_builtins()
+    cfg = QRConfig() if config is None else config
+    if len(shape) < 2:
+        raise ValueError(f"qr plan expects a matrix shape, got {tuple(shape)}")
+    m, n = int(shape[-2]), int(shape[-1])
+    batched = len(shape) > 2
+    backend = jax.default_backend() if backend is None else backend
+
+    name = select_method(shape, dtype, cfg, backend=backend)
+    spec = get_method(name)
+
+    if batched and not spec.batched:
+        raise ValueError(f"method {name!r} does not support batched inputs")
+    if cfg.mode == "full" and not spec.supports_full_q:
+        raise ValueError(f"method {name!r} produces thin Q only")
+    if spec.min_aspect > 0 and m < spec.min_aspect * n:
+        raise ValueError(
+            f"method {name!r} expects tall-skinny input "
+            f"(m >= {spec.min_aspect:g}n, got {m}x{n})")
+
+    use_kernel = cfg.use_kernel
+    if use_kernel is None:
+        use_kernel = (backend == "tpu" and spec.kernel_backed
+                      and _kernel_fits(spec, m, n, cfg, dtype))
+    elif use_kernel and not spec.kernel_backed:
+        raise ValueError(f"method {name!r} has no kernel-backed realization")
+
+    resolved = dataclasses.replace(cfg, method=name, use_kernel=bool(use_kernel))
+    if spec.resolve is not None:
+        resolved = spec.resolve(m, n, resolved)
+    return QRSolver(shape=(m, n), dtype=np.dtype(dtype), config=resolved,
+                    spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# solver
+# ---------------------------------------------------------------------------
+
+def _default_solve(spec: MethodSpec, a: Array, cfg: QRConfig):
+    """Derive per-mode output from a packed ``factor`` realization."""
+    from repro.core import householder
+
+    m, n = a.shape
+    k = min(m, n)
+    packed, taus = spec.factor(a, cfg)
+    r = householder.unpack_r(packed, n)
+    if cfg.mode == "r":
+        return sign_fix_r(r) if cfg.sign_fix else r
+    if cfg.mode == "reduced":
+        if cfg.q_method == "solve" and m >= n:
+            from repro.core.tsqr import triangular_inverse_apply
+
+            q = triangular_inverse_apply(a, r[:n, :n])
+        else:
+            q = householder.form_q(packed, taus)
+        return sign_fix_qr(q, r) if cfg.sign_fix else (q, r)
+    # mode == "full": Q is (m, m); R padded to (m, n) with zero rows.
+    q = householder.form_q(packed, taus, full=True)
+    if m > k:
+        r = jnp.vstack([r, jnp.zeros((m - k, n), r.dtype)])
+    return sign_fix_qr(q, r) if cfg.sign_fix else (q, r)
+
+
+@dataclasses.dataclass(frozen=True)
+class QRSolver:
+    """A planned QR factorization for one matrix shape.
+
+    ``config`` is fully resolved (concrete method / kernel flag / nblocks);
+    the solver is hashable and may be closed over or passed as a
+    ``jax.jit`` static argument.
+    """
+
+    shape: Tuple[int, int]
+    dtype: np.dtype
+    config: QRConfig
+    spec: MethodSpec
+
+    # -- internals ---------------------------------------------------------
+
+    def _check(self, a: Array) -> None:
+        if a.ndim < 2 or tuple(a.shape[-2:]) != self.shape:
+            raise ValueError(
+                f"solver planned for {self.shape}, got input shape {a.shape}")
+        if np.dtype(a.dtype) != self.dtype:
+            raise ValueError(
+                f"solver planned for dtype {self.dtype}, got {a.dtype}; "
+                "re-plan or cast (kernel/VMEM decisions are dtype-dependent)")
+        if a.ndim > 2 and not self.spec.batched:
+            raise ValueError(
+                f"method {self.config.method!r} does not support batched inputs")
+
+    def _batched(self, f: Callable, a: Array):
+        for _ in range(a.ndim - 2):
+            f = jax.vmap(f)
+        return f(a)
+
+    def _cast(self, a: Array) -> Array:
+        if self.config.precision is not None:
+            return a.astype(self.config.precision)
+        return a
+
+    def _solve2d(self, a: Array):
+        cfg = self.config
+        a = self._cast(a)
+        if self.spec.solve is not None:
+            return self.spec.solve(a, cfg)
+        return _default_solve(self.spec, a, cfg)
+
+    def _factor2d(self, a: Array):
+        return self.spec.factor(self._cast(a), self.config)
+
+    # -- public ------------------------------------------------------------
+
+    def solve(self, a: Array):
+        """Factorize per ``config.mode``: (Q, R), R only, or full (Q, R).
+
+        Inputs with leading batch dims are vmapped over those dims.
+        """
+        self._check(a)
+        return self._batched(self._solve2d, a)
+
+    def factor(self, a: Array):
+        """LAPACK packed form ``(packed, taus)`` (methods that have one)."""
+        if self.spec.factor is None:
+            raise ValueError(
+                f"method {self.config.method!r} has no packed factored form")
+        self._check(a)
+        return self._batched(self._factor2d, a)
+
+    def orthogonalize(self, a: Array):
+        """Sign-fixed thin Q (the optimizer primitive) of tall input."""
+        solver = self if (self.config.sign_fix and self.config.mode == "reduced") \
+            else dataclasses.replace(
+                self, config=self.config.replace(sign_fix=True, mode="reduced"))
+        q, _ = solver.solve(a)
+        return q
+
+    def lstsq(self, a: Array, b: Array) -> Array:
+        """Least-squares solve ``min ||a x - b||`` via this realization."""
+        from jax.scipy.linalg import solve_triangular
+
+        m, n = self.shape
+        if m < n:
+            raise ValueError("lstsq expects m >= n")
+        if a.ndim != 2:
+            raise ValueError("lstsq expects a single matrix")
+        b2 = b if b.ndim == 2 else b[:, None]
+        if self.spec.factor is not None:
+            from repro.core import householder
+
+            packed, taus = self.factor(a)
+            qtb = householder.apply_q(packed, taus, b2, transpose=True)
+            r = householder.unpack_r(packed, n)[:n, :n]
+            x = solve_triangular(r, qtb[:n], lower=False)
+        else:
+            cfg = self.config.replace(mode="reduced", sign_fix=False)
+            q, r = dataclasses.replace(self, config=cfg).solve(a)
+            x = solve_triangular(r[:n, :n], q.T @ self._cast(b2), lower=False)
+        return x[:, 0] if b.ndim == 1 else x

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.scipy.linalg import solve_triangular
 
+from repro.compat import axis_size
 from repro.core.blocked import geqrf
 from repro.core.householder import unpack_r
 
@@ -40,6 +41,7 @@ __all__ = [
     "tsqr_tree_sharded",
     "distributed_qr",
     "triangular_inverse_apply",
+    "default_nblocks",
 ]
 
 
@@ -91,15 +93,17 @@ def triangular_inverse_apply(a: Array, r: Array, *, rcond: float = 1e-7) -> Arra
 
 
 def tsqr_qr(a: Array, *, nblocks: int = 4, refine: bool = True,
-            qr_block: int = 32) -> Tuple[Array, Array]:
+            qr_block: int = 32, use_kernel: bool = False
+            ) -> Tuple[Array, Array]:
     """Thin QR of tall-skinny ``a`` via TSQR-R + ``Q = A R^{-1}``.
 
     ``refine=True`` runs a second pass (CQR2-style) restoring orthogonality
     to ~machine eps even for moderately ill-conditioned inputs."""
-    r1 = tsqr_r(a, nblocks=nblocks, qr_block=qr_block)
+    r1 = tsqr_r(a, nblocks=nblocks, qr_block=qr_block, use_kernel=use_kernel)
     q = triangular_inverse_apply(a, r1)
     if refine:
-        r2 = tsqr_r(q, nblocks=nblocks, qr_block=qr_block)
+        r2 = tsqr_r(q, nblocks=nblocks, qr_block=qr_block,
+                    use_kernel=use_kernel)
         q = triangular_inverse_apply(q, r2)
         return q, r2 @ r1
     return q, r1
@@ -122,7 +126,7 @@ def tsqr_tree_sharded(a_local: Array, axis_name: str, *, qr_block: int = 32,
     Requires the mesh axis size to be a power of two (all production
     meshes here are 16/32-way).
     """
-    p = lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     if p & (p - 1):
         raise ValueError(f"tsqr_tree_sharded needs power-of-two axis, got {p}")
     n = a_local.shape[1]
@@ -165,3 +169,55 @@ def distributed_qr(a_local: Array, axis_name: str, *, refine: bool = True,
         q_local = triangular_inverse_apply(q_local, r2)
         return q_local, r2 @ r1
     return q_local, r1
+
+
+# -- registry -----------------------------------------------------------------
+from repro.core.plan import (  # noqa: E402
+    MethodSpec, QRConfig, register_method, sign_fix_qr, sign_fix_r)
+
+
+def default_nblocks(m: int, n: int) -> int:
+    """Largest divisor of m in [2, 8] scaled by aspect (legacy heuristic:
+    deep enough trees for tall inputs, always an exact row partition)."""
+    nb = max(2, min(8, m // max(n, 1)))
+    while m % nb != 0:
+        nb -= 1
+    return max(nb, 1)
+
+
+def _resolve_tsqr(m: int, n: int, cfg: QRConfig) -> QRConfig:
+    nb = cfg.nblocks if cfg.nblocks is not None else default_nblocks(m, n)
+    if m % nb != 0:
+        raise ValueError(f"m={m} not divisible by nblocks={nb}")
+    return cfg.replace(nblocks=nb)
+
+
+def _solve_tsqr(a: Array, cfg: QRConfig):
+    qr_block = min(cfg.block, a.shape[1])
+    if cfg.mode == "r":
+        r = tsqr_r(a, nblocks=cfg.nblocks, qr_block=qr_block,
+                   use_kernel=bool(cfg.use_kernel))
+        return sign_fix_r(r) if cfg.sign_fix else r
+    q, r = tsqr_qr(a, nblocks=cfg.nblocks, refine=cfg.refine, qr_block=qr_block,
+                   use_kernel=bool(cfg.use_kernel))
+    return sign_fix_qr(q, r) if cfg.sign_fix else (q, r)
+
+
+def _vmem_tsqr(m: int, n: int, cfg: QRConfig) -> int:
+    """Leaf working set: one (m/nblocks, min(block, n)) panel in VMEM."""
+    from repro.kernels import ops
+
+    nb = cfg.nblocks if cfg.nblocks is not None else default_nblocks(m, n)
+    return ops.vmem_bytes_mht_panel(m // nb, min(cfg.block, n))
+
+
+register_method(MethodSpec(
+    name="tsqr",
+    solve=_solve_tsqr,
+    resolve=_resolve_tsqr,
+    supports_full_q=False,
+    min_aspect=4.0,
+    kernel_backed=True,
+    vmem_bytes=_vmem_tsqr,
+    description="tall-skinny tree QR (single device; sharded via shard_map)",
+))

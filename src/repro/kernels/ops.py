@@ -80,3 +80,17 @@ def wy_trailing(v: Array, t: Array, c: Array, *, bn: int = 128,
     interp = default_interpret() if interpret is None else interpret
     bn_eff = min(bn, max(8, c.shape[1]))
     return _wy_trailing_jit(v, t, c, bn_eff, interp)
+
+
+# -- registry -----------------------------------------------------------------
+# The kernel backend registers its dispatch policy (VMEM estimator + budget
+# + interpret default) with the planner, so ``method="auto"`` / the
+# ``use_kernel=None`` auto policy can decide panel-fits-VMEM centrally.
+from repro.core.plan import KernelPolicy, register_kernel_policy  # noqa: E402
+
+register_kernel_policy(KernelPolicy(
+    name="mht_panel",
+    vmem_bytes=vmem_bytes_mht_panel,
+    vmem_budget=_VMEM_BUDGET,
+    default_interpret=default_interpret,
+))

@@ -28,8 +28,8 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocked import geqrf_fori
 from repro.core.householder import form_q, unpack_r
+from repro.core.plan import QRConfig, plan as qr_plan
 from repro.optim.newton_schulz import newton_schulz_orthogonalize
 
 Array = jax.Array
@@ -79,8 +79,14 @@ def _pad_to(x: Array, mult: int) -> Array:
 
 
 def qr_orthogonalize_2d(m_in: Array, *, block: int = 64,
-                        q_method: str = "formq") -> Array:
+                        q_method: str = "formq",
+                        config: Optional[QRConfig] = None) -> Array:
     """Sign-fixed thin Q of a single (possibly wide) matrix via MHT QR.
+
+    ``config`` (a :class:`repro.core.plan.QRConfig`) overrides
+    ``block``/``q_method``; the factorization itself always routes through
+    the planner's method registry (``geqrf_fori``: one fused O(1)-HLO
+    program regardless of matrix size).
 
     ``q_method``:
       * "solve" (beyond-paper §Perf iteration Q1): Q = A R^{-1}
@@ -93,13 +99,22 @@ def qr_orthogonalize_2d(m_in: Array, *, block: int = 64,
         reflectors; exact even for singular input, but a min(m,n)-trip
         sequential loop.
     """
+    if config is None:
+        config = QRConfig(method="geqrf_fori", block=block, q_method=q_method,
+                          precision="float32", sign_fix=True)
+    q_method = config.q_method
     transpose = m_in.shape[0] < m_in.shape[1]
     a = m_in.T if transpose else m_in
     mrows, ncols = a.shape
-    blk = min(block, ncols)
+    blk = min(config.block, ncols)
     a32 = a.astype(jnp.float32)
     padded = _pad_to(a32, blk)
-    packed, taus = geqrf_fori(padded, block=blk)
+    # The optimizer needs the packed factored form — resolve "auto" to the
+    # fused-program realization rather than letting the planner pick TSQR.
+    method = "geqrf_fori" if config.method == "auto" else config.method
+    solver = qr_plan(padded.shape, jnp.float32,
+                     config.replace(block=blk, method=method))
+    packed, taus = solver.factor(padded)
     r = unpack_r(packed)[:ncols, :ncols]
     if q_method == "solve":
         # Q = A R^{-1} with R^{-1} formed explicitly: the (n x n)
@@ -127,7 +142,8 @@ def qr_orthogonalize_2d(m_in: Array, *, block: int = 64,
 def _orthogonalize_leaf(mu: Array, method: str,
                         orth_fn: Optional[Callable],
                         q_method: str = "formq",
-                        shard_leaves: bool = False) -> Array:
+                        shard_leaves: bool = False,
+                        config: Optional[QRConfig] = None) -> Array:
     """Batched orthogonalization over any leading axes of a >=2-D leaf.
 
     ``shard_leaves`` (beyond-paper §Perf iteration Q2): constrain the
@@ -187,7 +203,10 @@ def _orthogonalize_leaf(mu: Array, method: str,
     if orth_fn is not None:
         f = orth_fn
     elif method == "qr":
-        f = functools.partial(qr_orthogonalize_2d, q_method=q_method)
+        if config is not None:
+            config = config.replace(q_method=q_method)
+        f = functools.partial(qr_orthogonalize_2d, q_method=q_method,
+                              config=config)
     elif method == "ns":
         f = newton_schulz_orthogonalize
     else:
@@ -219,9 +238,15 @@ def muon_update(
     orthogonalize_fn: Optional[Callable] = None,
     qr_q_method: str = "formq",
     qr_shard_leaves: bool = False,
+    qr_config: Optional[QRConfig] = None,
 ):
     """One optimizer step.  ``lr`` is the Muon LR; AdamW params use
-    ``lr * adam_lr_ratio`` (embeddings etc. want a smaller step)."""
+    ``lr * adam_lr_ratio`` (embeddings etc. want a smaller step).
+
+    ``qr_config`` tunes the QR realization (method/block/kernel policy)
+    of the orthogonalization; ``qr_q_method`` still wins for the Q
+    materialization strategy (the sharding fallback logic may override it
+    per leaf)."""
     step = state.step + 1
     t = step.astype(jnp.float32)
     bc1 = 1.0 - adam_b1 ** t
@@ -234,7 +259,8 @@ def muon_update(
             direction = g + momentum * mu if nesterov else mu
             o = _orthogonalize_leaf(direction, method, orthogonalize_fn,
                                     q_method=qr_q_method,
-                                    shard_leaves=qr_shard_leaves)
+                                    shard_leaves=qr_shard_leaves,
+                                    config=qr_config)
             d_out, d_in = p.shape[-2], p.shape[-1]
             scale = jnp.sqrt(jnp.maximum(1.0, d_out / d_in))
             new_p = p - lr * (scale * o + weight_decay * p)

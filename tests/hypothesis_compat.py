@@ -1,0 +1,85 @@
+"""Property-testing shim: real `hypothesis` when installed, else a
+deterministic fallback so tier-1 collects and runs without the dev extra.
+
+The fallback implements just the surface this suite uses —
+``@settings(max_examples=..., deadline=...)`` stacked on
+``@given(name=st.integers(...)/st.floats(...)/...)`` — by drawing a fixed
+number of examples from a seeded NumPy generator.  It does no shrinking
+and no edge-case targeting; install ``hypothesis`` (the ``dev`` extra in
+pyproject.toml) for the real engine.
+
+Usage in test modules:
+
+    from hypothesis_compat import given, settings, st
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+
+    import numpy as _np
+
+    # Keep fallback runs cheap: property bodies here re-jit per drawn shape,
+    # so a handful of deterministic examples is the right CI trade.
+    _FALLBACK_MAX_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mimics `hypothesis.strategies` namespace
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(
+                lambda rng: elems[int(rng.integers(0, len(elems)))])
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = _np.random.default_rng(0xC0DE)
+                for _ in range(wrapper._max_examples):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper._max_examples = _FALLBACK_MAX_EXAMPLES
+            wrapper.is_hypothesis_fallback = True
+            # pytest must not see the drawn parameters as fixtures: hide the
+            # wrapped signature (functools.wraps exposes it via __wrapped__).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+    def settings(*, max_examples=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None and hasattr(fn, "_max_examples"):
+                fn._max_examples = min(max_examples, _FALLBACK_MAX_EXAMPLES)
+            return fn
+
+        return deco

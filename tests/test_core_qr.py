@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     apply_q,
@@ -112,6 +112,28 @@ def test_apply_q_transpose_roundtrip():
     c = _rand(24, 6, seed=4)
     back = apply_q(packed, taus, apply_q(packed, taus, c, transpose=True))
     np.testing.assert_allclose(np.asarray(back), np.asarray(c), atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n", [(8, 8), (16, 8), (12, 5), (32, 32)])
+def test_qr_full_mode(m, n):
+    """Regression: mode="full" used to return (q, (q, r)) when m == k
+    (the ternary bound to the tuple's second element)."""
+    from repro.core import QRConfig, plan
+
+    a = _rand(m, n, seed=m * 7 + n)
+    out = qr(a, mode="full")
+    assert isinstance(out, tuple) and len(out) == 2
+    q, r = out
+    assert q.shape == (m, m), "full Q must be m x m"
+    assert r.shape == (m, n), "full R must be m x n"
+    assert isinstance(r, jnp.ndarray), "R must be an array, not a nested tuple"
+    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(m), atol=1e-4)
+    # config path produces the identical full factorization
+    q2, r2 = plan(a.shape, a.dtype, QRConfig(method="geqrf_ht", mode="full")
+                  ).solve(a)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r2))
 
 
 def test_orthogonalize_tall_and_wide():

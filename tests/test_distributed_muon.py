@@ -14,6 +14,7 @@ _SCRIPT = textwrap.dedent("""
     from repro.core.tsqr import distributed_qr
     from repro.optim import muon_init, muon_update, qr_orthogonalize_2d
 
+    from repro.compat import shard_map
     mesh = jax.make_mesh((8,), ("data",))
 
     # the distributed orthogonalizer: rows sharded over "data", thin Q out
@@ -21,9 +22,9 @@ _SCRIPT = textwrap.dedent("""
         rows = m2d.shape[0]
         transpose = m2d.shape[0] < m2d.shape[1]
         a = m2d.T if transpose else m2d
-        f = jax.shard_map(lambda x: distributed_qr(x, "data"),
-                          mesh=mesh, in_specs=P("data", None),
-                          out_specs=(P("data", None), P()))
+        f = shard_map(lambda x: distributed_qr(x, "data"),
+                      mesh=mesh, in_specs=P("data", None),
+                      out_specs=(P("data", None), P()))
         q, r = f(a)
         signs = jnp.where(jnp.diagonal(r) >= 0, 1.0, -1.0)
         q = q * signs[None, :]
@@ -57,6 +58,7 @@ def test_distributed_qr_muon_subprocess():
     res = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
         timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "JAX_PLATFORMS": "cpu"},  # never probe a TPU from the test
         cwd=__file__.rsplit("/", 2)[0])
     assert "DIST_MUON_OK" in res.stdout, res.stderr[-3000:]

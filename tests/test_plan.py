@@ -1,0 +1,264 @@
+"""QRPlan / solver-registry API tests.
+
+Covers the planner redesign: registry round-trip, QRConfig hashability
+under jit static args, the method="auto" routing table, batched solve vs
+the jnp.linalg.qr oracle, the legacy string-kwarg shim, and the
+mode="full" regression.
+"""
+
+import functools
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import QRConfig, lstsq, orthogonalize, qr
+from repro.core.plan import (
+    MethodSpec,
+    available_methods,
+    get_method,
+    plan,
+    register_method,
+    select_method,
+    unregister_method,
+)
+
+
+def _rand(*shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_roundtrip():
+    spec = MethodSpec(name="_dummy_qr", factor=lambda a, cfg: (a, a[0]),
+                      description="test stub")
+    register_method(spec)
+    try:
+        assert get_method("_dummy_qr") is spec
+        assert "_dummy_qr" in available_methods()
+    finally:
+        unregister_method("_dummy_qr")
+    assert "_dummy_qr" not in available_methods()
+
+
+def test_unknown_method_errors():
+    with pytest.raises(ValueError, match="unknown method"):
+        get_method("nope")
+    with pytest.raises(ValueError, match="unknown method"):
+        plan((8, 8), jnp.float32, QRConfig(method="nope"))
+    with pytest.raises(ValueError, match="unknown method"):
+        qr(_rand(8, 8), method="nope")
+
+
+def test_builtins_registered():
+    methods = available_methods()
+    for name in ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "geqrf_fori",
+                 "tsqr"):
+        assert name in methods
+    assert get_method("tsqr").min_aspect == 4.0
+    assert not get_method("tsqr").supports_full_q
+    assert get_method("geqrf_ht").kernel_backed
+
+
+# ------------------------------------------------------------------ QRConfig
+
+def test_qrconfig_hashable_and_value_semantics():
+    a = QRConfig(method="geqrf_ht", block=16)
+    b = QRConfig(method="geqrf_ht", block=16)
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1
+    assert a.replace(block=32) != a
+
+
+def test_qrconfig_validation():
+    with pytest.raises(ValueError, match="mode"):
+        QRConfig(mode="banana")
+    with pytest.raises(ValueError, match="q_method"):
+        QRConfig(q_method="banana")
+    with pytest.raises(ValueError, match="block"):
+        QRConfig(block=0)
+
+
+def test_qrconfig_as_jit_static_arg():
+    @functools.partial(jax.jit, static_argnames=("cfg",))
+    def f(a, cfg: QRConfig):
+        return plan(a.shape, a.dtype, cfg).solve(a)
+
+    a = _rand(24, 12, seed=1)
+    q1, r1 = f(a, QRConfig(method="geqrf_ht", block=8))
+    q2, r2 = f(a, QRConfig(method="geqrf_ht", block=8))  # cache hit
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    qn, rn = jnp.linalg.qr(a)
+    s = jnp.sign(jnp.diagonal(r1)) * jnp.sign(jnp.diagonal(rn))
+    np.testing.assert_allclose(np.asarray(q1 * s[None, :]), np.asarray(qn),
+                               atol=3e-5)
+
+
+# ------------------------------------------------------------- auto routing
+
+def test_auto_picks_tsqr_for_tall_skinny():
+    solver = plan((1024, 32), jnp.float32, QRConfig())
+    assert solver.config.method == "tsqr"
+    assert solver.config.nblocks == 8  # planner-chosen divisor of m
+    assert 1024 % solver.config.nblocks == 0
+
+
+def test_auto_picks_kernel_geqrf_ht_on_tpu_when_panel_fits():
+    # aspect < 4 so TSQR is out; panel (256 x 32) easily fits VMEM
+    solver = plan((256, 128), jnp.float32, QRConfig(), backend="tpu")
+    assert solver.config.method == "geqrf_ht"
+    assert solver.config.use_kernel is True
+
+
+def test_auto_skips_kernel_when_panel_exceeds_vmem():
+    # 2 * 40000 * 32 * 4 bytes > the 8 MiB budget
+    solver = plan((40000, 16384), jnp.float32, QRConfig(), backend="tpu")
+    assert solver.config.method == "geqrf_ht"
+    assert solver.config.use_kernel is False
+
+
+def test_auto_small_problems_use_unblocked_mht():
+    assert select_method((24, 16), jnp.float32, QRConfig()) == "geqr2_ht"
+
+
+def test_auto_default_is_blocked_mht_on_cpu():
+    solver = plan((256, 128), jnp.float32, QRConfig(), backend="cpu")
+    assert solver.config.method == "geqrf_ht"
+    assert solver.config.use_kernel is False
+
+
+def test_auto_never_picks_tsqr_for_full_mode():
+    solver = plan((1024, 32), jnp.float32, QRConfig(mode="full"))
+    assert solver.config.method != "tsqr"
+    q, r = solver.solve(_rand(1024, 32, seed=3))
+    assert q.shape == (1024, 1024) and r.shape == (1024, 32)
+
+
+def test_capability_checks():
+    with pytest.raises(ValueError, match="tall-skinny"):
+        plan((64, 32), jnp.float32, QRConfig(method="tsqr"))
+    with pytest.raises(ValueError, match="thin Q"):
+        plan((256, 16), jnp.float32, QRConfig(method="tsqr", mode="full"))
+    with pytest.raises(ValueError, match="kernel"):
+        plan((64, 32), jnp.float32, QRConfig(method="geqr2", use_kernel=True))
+
+
+def test_auto_tsqr_matches_oracle():
+    a = _rand(1024, 32, seed=4)
+    q, r = qr(a, config=QRConfig())
+    rn = jnp.linalg.qr(a)[1]
+    s = jnp.sign(jnp.diagonal(r)) * jnp.sign(jnp.diagonal(rn))
+    np.testing.assert_allclose(np.asarray(r * s[:, None]), np.asarray(rn),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=1e-4)
+
+
+# ------------------------------------------------------- batched + jit/vmap
+
+def test_batched_qr_matches_oracle():
+    a = _rand(3, 32, 16, seed=5)
+    qb, rb = qr(a, config=QRConfig(method="geqrf_ht", block=8))
+    assert qb.shape == (3, 32, 16) and rb.shape == (3, 16, 16)
+    for i in range(3):
+        qn, rn = jnp.linalg.qr(a[i])
+        s = jnp.sign(jnp.diagonal(rb[i])) * jnp.sign(jnp.diagonal(rn))
+        np.testing.assert_allclose(np.asarray(qb[i] * s[None, :]),
+                                   np.asarray(qn), atol=3e-5)
+        np.testing.assert_allclose(np.asarray(rb[i] * s[:, None]),
+                                   np.asarray(rn), atol=3e-5)
+
+
+def test_batched_solver_under_jit_and_vmap():
+    a = _rand(4, 48, 12, seed=6)
+    solver = plan(a.shape, a.dtype, QRConfig(method="geqrf_ht", block=4))
+    out_solver = solver.solve(a)  # internal vmap rule
+    f = jax.jit(jax.vmap(plan((48, 12), a.dtype,
+                              QRConfig(method="geqrf_ht", block=4)).solve))
+    out_jit = f(a)  # external jit+vmap over a 2-D solver
+    np.testing.assert_allclose(np.asarray(out_solver[0]),
+                               np.asarray(out_jit[0]), atol=1e-6)
+    rec = jnp.einsum("bmk,bkn->bmn", out_jit[0], out_jit[1])
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(a), atol=1e-4)
+
+
+def test_batched_auto_tsqr():
+    a = _rand(2, 256, 16, seed=7)
+    solver = plan(a.shape, a.dtype, QRConfig())
+    assert solver.config.method == "tsqr"
+    q, r = solver.solve(a)
+    assert q.shape == (2, 256, 16) and r.shape == (2, 16, 16)
+    rec = jnp.einsum("bmk,bkn->bmn", q, r)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(a), atol=1e-4)
+
+
+# ------------------------------------------------------------- legacy shim
+
+def test_legacy_shim_identical_to_planner():
+    a = _rand(48, 20, seed=8)
+    with pytest.warns(DeprecationWarning):
+        q1, r1 = qr(a, method="geqrf_ht")
+    q2, r2 = plan(a.shape, a.dtype, QRConfig(method="geqrf_ht")).solve(a)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_legacy_defaults_silent_and_unchanged():
+    a = _rand(32, 12, seed=9)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        q1, r1 = qr(a)  # no legacy kwargs — no deprecation noise
+    assert not any(issubclass(w.category, DeprecationWarning) for w in caught)
+    # pre-registry default was geqrf_ht/block=32/no kernel
+    q2, r2 = plan(a.shape, a.dtype,
+                  QRConfig(method="geqrf_ht", block=32, use_kernel=False)
+                  ).solve(a)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_config_plus_legacy_kwargs_rejected():
+    a = _rand(16, 8, seed=10)
+    with pytest.raises(ValueError, match="not both"):
+        qr(a, config=QRConfig(), method="geqr2")
+
+
+def test_legacy_tsqr_kwarg_still_routes():
+    a = _rand(240, 12, seed=11)
+    with pytest.warns(DeprecationWarning):
+        q, r = qr(a, method="tsqr")
+    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=1e-4)
+
+
+# ------------------------------------------------ wrappers through planner
+
+def test_orthogonalize_auto_routes_tall_skinny_through_tsqr():
+    cfg = QRConfig()
+    assert select_method((256, 16), jnp.float32,
+                         cfg.replace(sign_fix=True)) == "tsqr"
+    o = orthogonalize(_rand(256, 16, seed=12), config=cfg)
+    np.testing.assert_allclose(np.asarray(o.T @ o), np.eye(16), atol=1e-4)
+    # wide input factorizes the transpose — also tall-skinny, also TSQR
+    ow = orthogonalize(_rand(16, 256, seed=13), config=cfg)
+    assert ow.shape == (16, 256)
+    np.testing.assert_allclose(np.asarray(ow @ ow.T), np.eye(16), atol=1e-4)
+
+
+def test_lstsq_auto_routes_tall_skinny_through_tsqr():
+    a = _rand(256, 8, seed=14)
+    x_true = _rand(8, seed=15)
+    b = a @ x_true
+    x = lstsq(a, b, config=QRConfig())
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_true), atol=1e-3)
+
+
+def test_solver_q_method_solve_matches_formq():
+    a = _rand(96, 24, seed=16)
+    q1, _ = plan(a.shape, a.dtype,
+                 QRConfig(method="geqrf_ht", q_method="formq")).solve(a)
+    q2, _ = plan(a.shape, a.dtype,
+                 QRConfig(method="geqrf_ht", q_method="solve")).solve(a)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-4)

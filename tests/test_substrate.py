@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticLM
@@ -141,10 +141,11 @@ def test_compressed_psum_subprocess():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import compressed_psum, init_error_state
 
+        from repro.compat import shard_map
         mesh = jax.make_mesh((4,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (4, 256), jnp.float32)
         err = jnp.zeros((4, 256), jnp.float32)
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             lambda gg, ee: compressed_psum({"g": gg}, "data", {"g": ee}),
             mesh=mesh, in_specs=(P("data"), P("data")),
             out_specs=({"g": P()}, {"g": P("data")})))
@@ -157,7 +158,8 @@ def test_compressed_psum_subprocess():
     res = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=600,
                          env={"PYTHONPATH": "src",
-                              "PATH": "/usr/bin:/bin:/usr/local/bin"},
+                              "PATH": "/usr/bin:/bin:/usr/local/bin",
+                              "JAX_PLATFORMS": "cpu"},
                          cwd=__file__.rsplit("/", 2)[0])
     assert "COMPRESSED_PSUM_OK" in res.stdout, res.stderr[-2000:]
 
@@ -228,7 +230,8 @@ def test_sharding_rules_divisibility_fallbacks():
     res = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=600,
                          env={"PYTHONPATH": "src",
-                              "PATH": "/usr/bin:/bin:/usr/local/bin"},
+                              "PATH": "/usr/bin:/bin:/usr/local/bin",
+                              "JAX_PLATFORMS": "cpu"},
                          cwd=__file__.rsplit("/", 2)[0])
     assert "SHARDING_RULES_OK" in res.stdout, res.stderr[-2000:]
 

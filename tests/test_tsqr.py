@@ -12,7 +12,7 @@ import textwrap
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import tsqr_qr, tsqr_r
 from repro.core.tsqr import triangular_inverse_apply
@@ -80,12 +80,13 @@ _SHARDED_SCRIPT = textwrap.dedent(
     from jax.sharding import Mesh, PartitionSpec as P
     from repro.core.tsqr import distributed_qr, tsqr_tree_sharded
 
+    from repro.compat import shard_map
     mesh = jax.make_mesh((8,), ("data",))
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((256, 16)), jnp.float32)
 
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x: distributed_qr(x, "data"),
             mesh=mesh,
             in_specs=P("data", None),
@@ -97,7 +98,7 @@ _SHARDED_SCRIPT = textwrap.dedent(
     assert np.linalg.norm(np.asarray(q).T @ np.asarray(q) - np.eye(16)) < 1e-3
 
     g = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda x: tsqr_tree_sharded(x, "data"),
             mesh=mesh,
             in_specs=P("data", None),
@@ -118,7 +119,8 @@ def test_sharded_tsqr_subprocess():
     res = subprocess.run(
         [sys.executable, "-c", _SHARDED_SCRIPT],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "JAX_PLATFORMS": "cpu"},
         cwd=__file__.rsplit("/", 2)[0],
     )
     assert "SHARDED_TSQR_OK" in res.stdout, res.stderr[-3000:]
