@@ -1,20 +1,28 @@
-"""Paper Fig. 9: theta (parallelism ratio) vs matrix size.
+"""Paper Fig. 9: theta (parallelism ratio) vs matrix size — HT vs MHT vs
+the tiled task graph.
 
 Rebuilds the HT and MHT DAGs symbolically and reports
   - theta_levels: level ratio under unbounded-width tree reductions,
   - theta_width4: the paper's 4-wide RDP phase model (saturates ~0.749),
-  - beta gain (equal-ops accounting, eq. 9/10).
+  - beta gain (equal-ops accounting, eq. 9/10),
+and extends the same beta = ops/levels metric to the tiled wavefront
+DAG (:func:`repro.core.dag.analyze_tiled`), where a level is one
+wavefront of macro tile tasks — the cross-panel parallelism the paper's
+§5.2 PE tiling targets.
 """
 
 import time
 
-from repro.core.dag import theta_curve
+from repro.core.dag import theta_curve, tiled_curve
 
 
 def run() -> list:
     t0 = time.time()
     rows = theta_curve((4, 8, 16, 32, 64, 128))["rows"]
     dt = (time.time() - t0) * 1e6 / len(rows)
+    t1 = time.time()
+    trows = tiled_curve((64, 128, 256), tile=16)["rows"]
+    dt_tiled = (time.time() - t1) * 1e6 / len(trows)
     out = []
     for r in rows:
         out.append((f"fig9_theta_n{r['n']}", dt,
@@ -22,4 +30,10 @@ def run() -> list:
                     f"gain_w4={r['gain_width4']:.3f};"
                     f"theta_tree={r['theta_levels']:.4f};"
                     f"beta_mht={r['beta_mht']:.1f}"))
+    for r in trows:
+        out.append((f"fig9_tiled_n{r['n']}", dt_tiled,
+                    f"beta_tiled={r['beta_tiled']:.1f};"
+                    f"beta_mht={r['beta_mht']:.1f};"
+                    f"gain_tiled={r['beta_gain_tiled']:.1f};"
+                    f"wavefronts={r['tiled_levels']}"))
     return out

@@ -1,0 +1,88 @@
+"""QR method sweep — the perf-trajectory benchmark behind BENCH_qr.json.
+
+Times every registered realization (including the tiled task-graph
+backend) over a shape/dtype grid and derives effective GFLOP/s from the
+standard thin-QR flop count 2 n^2 (m - n/3).  ``benchmarks/run.py``
+serializes the records to ``BENCH_qr.json`` so the trajectory is
+comparable across PRs; ``--smoke`` shrinks the grid for CI (it exists to
+catch interpret-mode regressions in the Pallas tile ops on CPU, not to
+measure).
+"""
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import QRConfig, plan  # noqa: F401
+
+# (method, block) x shapes; tsqr only runs where its 4:1 aspect holds.
+_FULL_SHAPES = [(256, 256), (512, 512), (512, 128), (1024, 128), (1024, 256)]
+_SMOKE_SHAPES = [(96, 96), (128, 64), (256, 32)]
+_METHODS = ["geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr", "tiled"]
+_DTYPES = [jnp.float32]
+
+# Smoke mode also exercises the Pallas kernel paths in interpret mode.
+_SMOKE_KERNEL_METHODS = ("geqrf_ht", "tiled")
+
+
+def _qr_flops(m: int, n: int) -> float:
+    k = min(m, n)
+    return 2.0 * k * k * (m - k / 3.0)
+
+
+def _block(out):
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
+
+
+def _time_solve(solver, a, reps: int) -> float:
+    _block(solver.solve(a))  # warm the jit cache
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = solver.solve(a)
+    _block(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def sweep(smoke: bool = False) -> list:
+    """Run the grid; returns JSON-ready records
+    (method x shape x dtype -> wall time / effective GFLOPs)."""
+    shapes = _SMOKE_SHAPES if smoke else _FULL_SHAPES
+    reps = 2 if smoke else 5
+    rng = np.random.default_rng(0)
+    records = []
+    for m, n in shapes:
+        for dtype in _DTYPES:
+            a = jnp.asarray(rng.standard_normal((m, n)), dtype)
+            for method in _METHODS:
+                cfgs = [(method, QRConfig(method=method, mode="r",
+                                          block=64 if method == "tiled" else 32))]
+                if smoke and method in _SMOKE_KERNEL_METHODS:
+                    cfgs.append((f"{method}+kernel", QRConfig(
+                        method=method, mode="r", use_kernel=True,
+                        block=64 if method == "tiled" else 32)))
+                for label, cfg in cfgs:
+                    try:
+                        solver = plan(a.shape, a.dtype, cfg)
+                    except ValueError:  # capability mismatch (tsqr aspect)
+                        continue
+                    dt = _time_solve(solver, a, reps)
+                    records.append(dict(
+                        method=label, m=m, n=n, dtype=str(np.dtype(dtype)),
+                        wall_us=dt * 1e6,
+                        gflops=_qr_flops(m, n) / dt / 1e9,
+                    ))
+    return records
+
+
+def rows(records: list) -> list:
+    """Format sweep records as the harness's CSV rows."""
+    return [
+        (f"qr_{r['method']}_{r['m']}x{r['n']}_{r['dtype']}", r["wall_us"],
+         f"gflops={r['gflops']:.3f}")
+        for r in records
+    ]
+
+
+def run(smoke: bool = False) -> list:
+    return rows(sweep(smoke=smoke))

@@ -1,14 +1,21 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,...] [--smoke]
+                                            [--json BENCH_qr.json]
 
-Prints ``name,us_per_call,derived`` CSV rows.  The dry-run/roofline
-results (launch/dryrun.py + launch/roofline.py) are the TPU-side
-counterpart; these benches cover the paper's algorithmic claims on the
-host.
+Prints ``name,us_per_call,derived`` CSV rows, and serializes the QR
+method sweep (method x shape x dtype -> wall time / effective GFLOPs) to
+``BENCH_qr.json`` so the perf trajectory is tracked across PRs.
+
+``--smoke`` runs only the QR sweep on a reduced grid (including the
+Pallas kernel paths in interpret mode) — the CI hook that catches
+kernel regressions on CPU.  The dry-run/roofline results
+(launch/dryrun.py + launch/roofline.py) are the TPU-side counterpart;
+these benches cover the paper's algorithmic claims on the host.
 """
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -18,6 +25,7 @@ _MODULES = [
     ("fig13_kernel_traffic", "benchmarks.bench_kernel_traffic"),
     ("fig14e_scaling", "benchmarks.bench_scaling"),
     ("optim_beyond_paper", "benchmarks.bench_optim"),
+    ("qr_methods", "benchmarks.bench_qr_methods"),
 ]
 
 
@@ -25,11 +33,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated prefixes to run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced QR sweep only (CI kernel smoke)")
+    ap.add_argument("--json", default="BENCH_qr.json", metavar="PATH",
+                    help="where to write the QR sweep records")
     args = ap.parse_args()
-    only = args.only.split(",") if args.only else None
+    if args.smoke and args.only:
+        ap.error("--smoke and --only are mutually exclusive")
+    only = ["qr_methods"] if args.smoke else (
+        args.only.split(",") if args.only else None)
 
     print("name,us_per_call,derived")
     failures = 0
+    qr_records = None
     for label, modname in _MODULES:
         if only and not any(label.startswith(o) for o in only):
             continue
@@ -37,12 +53,24 @@ def main() -> None:
             import importlib
 
             mod = importlib.import_module(modname)
-            for name, us, derived in mod.run():
+            if label == "qr_methods":
+                qr_records = mod.sweep(smoke=args.smoke)
+                rows = mod.rows(qr_records)
+            else:
+                rows = mod.run()
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}")
         except Exception:
             failures += 1
             print(f"{label},ERROR,{traceback.format_exc().splitlines()[-1]}",
                   file=sys.stderr)
+
+    if qr_records is not None and args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": "qr-bench-v1", "smoke": args.smoke,
+                       "records": qr_records}, f, indent=1)
+        print(f"wrote {len(qr_records)} records to {args.json}",
+              file=sys.stderr)
     sys.exit(1 if failures else 0)
 
 

@@ -5,7 +5,10 @@ Layers:
     mht          Modified Householder Transform (fused macro-op updates)
     blocked      WY-blocked QR (DGEQRF / DGEQRFHT / fori_loop variant)
     tsqr         communication-avoiding distributed QR over mesh axes
-    dag          beta/theta parallelism quantification (paper fig 9)
+    tilegraph    tiled task-graph QR: GEQRT/TSQRT/LARFB/SSRFB tile DAG,
+                 statically wavefront-scheduled (cross-panel parallelism)
+    dag          beta/theta parallelism quantification (paper fig 9),
+                 extended to the tiled wavefront DAG (analyze_tiled)
     plan         QRConfig + method registry + plan() -> QRSolver
     api          qr() / orthogonalize() / lstsq() / qr_algorithm_eig()
 
@@ -30,6 +33,7 @@ from repro.core.plan import (
     plan,
     register_method,
 )
+from repro.core.tilegraph import tiled_qr, wavefront_count, wavefronts
 from repro.core.tsqr import distributed_qr, tsqr_qr, tsqr_r, tsqr_tree_sharded
 
 __all__ = [
@@ -39,4 +43,5 @@ __all__ = [
     "geqr2", "geqr2_ht", "geqrf", "geqrf_fori", "larft",
     "house_vector", "apply_q", "form_q", "unpack_r", "unpack_v", "mht_update",
     "tsqr_r", "tsqr_qr", "tsqr_tree_sharded", "distributed_qr",
+    "tiled_qr", "wavefronts", "wavefront_count",
 ]

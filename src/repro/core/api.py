@@ -14,8 +14,11 @@ Every realization lives in the method registry (see
     "geqrf_ht"   blocked WY, MHT panels                  (LAPACK_DGEQRFHT)
     "geqrf_fori" blocked MHT, fori_loop panels           (optimizer path)
     "tsqr"       tall-skinny tree QR (single device)
-    "auto"       planner heuristics: tall-skinny => tsqr, panel-fits-VMEM
-                 on TPU => kernel-backed geqrf_ht, single panel => geqr2_ht
+    "tiled"      tiled task-graph QR, wavefront-scheduled tile kernels
+                 (GEQRT/TSQRT/LARFB/SSRFB; block = tile size)
+    "auto"       planner heuristics: tall-skinny => tsqr, large
+                 near-square => tiled, panel-fits-VMEM on TPU =>
+                 kernel-backed geqrf_ht, single panel => geqr2_ht
 
 Selection, batching (vmap over leading dims), and the Pallas kernel
 policy (``use_kernel=None`` => compiled on TPU when the panel fits VMEM,

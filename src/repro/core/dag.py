@@ -32,7 +32,8 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["DagStats", "analyze_ht", "analyze_mht", "theta_curve"]
+__all__ = ["DagStats", "analyze_ht", "analyze_mht", "analyze_tiled",
+           "theta_curve", "tiled_curve"]
 
 
 @dataclasses.dataclass
@@ -150,6 +151,78 @@ def analyze_ht(n: int) -> DagStats:
 def analyze_mht(n: int) -> DagStats:
     """DAG stats for MHT (paper fig 8) on an n x n matrix."""
     return _analyze(n, "mht")
+
+
+# ---------------------------------------------------------------------------
+# tiled task-graph parallelism (extends the beta metric to the tile DAG)
+# ---------------------------------------------------------------------------
+
+def _qr_column_ops(length: int, trailing: int) -> int:
+    """Scalar ops of one Householder column: reflector generation
+    (~3L + const for the norm/sqrt/divide chain) plus the fused MHT
+    macro update (~4 ops per trailing entry: mul, tree-add share, scale,
+    subtract) — the same accounting _analyze tallies node-by-node."""
+    return 3 * length + 10 + 4 * length * trailing
+
+
+def _geqrt_ops(nb: int) -> int:
+    return sum(_qr_column_ops(nb - j, nb - 1 - j) for j in range(nb))
+
+
+def _tsqrt_ops(nb: int) -> int:
+    # Structured stacked QR: each column's reflector touches the pivot
+    # row of R plus the full nb-tall A block (length nb + 1).
+    return sum(_qr_column_ops(nb + 1, nb - 1 - j) for j in range(nb))
+
+
+def _larfb_ops(nb: int) -> int:
+    return 6 * nb**3          # three chained nb x nb GEMMs
+
+def _ssrfb_ops(nb: int) -> int:
+    return 6 * nb**3 + 2 * nb**2   # three GEMMs + two tile subtracts
+
+
+def analyze_tiled(n: int, tile: int = 16) -> DagStats:
+    """DAG stats for the tiled task-graph QR on an n x n matrix.
+
+    The tiled runtime executes *macro operations* (GEQRT / TSQRT / LARFB
+    / SSRFB tile tasks) as its DAG nodes — the paper's co-design premise
+    realized one level up: each node is a fused tile kernel
+    (:mod:`repro.kernels.tile_ops`), and a DAG level is one wavefront of
+    the static schedule (:func:`repro.core.tilegraph.wavefront_count`).
+    ``ops`` tallies the scalar work inside every macro node with the
+    same per-column accounting as :func:`analyze_mht`, so beta =
+    ops/levels measures how much scalar work each wavefront exposes.
+    Tiling multiplies beta: levels collapse from O(n log n) scalar steps
+    to p + 2q - 2 wavefronts while total ops stay O(n^3).
+    """
+    from repro.core.tilegraph import tile_grid, wavefront_count
+
+    p, q = tile_grid(n, n, tile)
+    ops = 0
+    for k in range(min(p, q)):
+        ops += _geqrt_ops(tile)
+        ops += (q - 1 - k) * _larfb_ops(tile)
+        ops += (p - 1 - k) * _tsqrt_ops(tile)
+        ops += (p - 1 - k) * (q - 1 - k) * _ssrfb_ops(tile)
+    return DagStats(ops=ops, depth=wavefront_count(p, q))
+
+
+def tiled_curve(sizes: Tuple[int, ...] = (64, 128, 256),
+                tile: int = 16) -> dict:
+    """beta of the tiled task DAG vs MHT per matrix size (bench fig-9
+    companion: HT vs MHT vs tiled ops-per-level)."""
+    rows = []
+    for n in sizes:
+        mht = analyze_mht(n)
+        tl = analyze_tiled(n, tile)
+        rows.append(dict(
+            n=n, tile=tile,
+            tiled_ops=tl.ops, tiled_levels=tl.depth,
+            beta_tiled=tl.beta, beta_mht=mht.beta,
+            beta_gain_tiled=tl.beta / mht.beta,
+        ))
+    return {"rows": rows}
 
 
 def phase_model_theta(n: int, *, width: int = 4, v_const: int = 9) -> dict:

@@ -12,16 +12,38 @@ call sites:
   * a **method registry** — every realization registers capability
     metadata (:class:`MethodSpec`) via :func:`register_method`;
     :mod:`repro.core.householder`, :mod:`repro.core.mht`,
-    :mod:`repro.core.blocked`, :mod:`repro.core.tsqr` and
-    :mod:`repro.kernels.ops` self-register at import.  New backends plug
-    in here instead of growing another ``if method == ...`` chain.
+    :mod:`repro.core.blocked`, :mod:`repro.core.tsqr`,
+    :mod:`repro.core.tilegraph` and :mod:`repro.kernels.ops` /
+    ``tile_ops`` self-register at import.  New backends plug in here
+    instead of growing another ``if method == ...`` chain.
   * :func:`plan` — resolve ``(shape, dtype, config)`` to a concrete
     :class:`QRSolver`, applying the ``method="auto"`` heuristics
-    (tall-skinny => TSQR with planner-chosen ``nblocks``,
-    panel-fits-VMEM on TPU => kernel-backed ``geqrf_ht``, single-panel
-    problems => unblocked MHT) and the kernel dispatch policy.
+    (tall-skinny => TSQR with planner-chosen ``nblocks``, large
+    near-square => tiled task-graph, panel-fits-VMEM on TPU =>
+    kernel-backed ``geqrf_ht``, single-panel problems => unblocked MHT)
+    and the kernel dispatch policy.
   * :class:`QRSolver` — ``solve`` / ``factor`` / ``lstsq`` on concrete
     shapes, with batched inputs (``a.ndim > 2``) handled by a vmap rule.
+
+Tiled QR task graph
+-------------------
+``method="tiled"`` (:mod:`repro.core.tilegraph`) decomposes the
+factorization into a DAG of tile tasks (GEQRT / TSQRT / LARFB / SSRFB)
+over an nb x nb tile grid, levelizes it statically, and lowers each
+wavefront to a ``vmap`` over that level's independent tiles — cross-panel
+parallelism the blocked methods serialize away.  ``QRConfig.block``
+doubles as the tile size; the ``method="auto"`` heuristic routes large
+near-square matrices (dims in [256, 2048], aspect < 4 — the upper bound
+keeps the symbolic DAG small at the default tile) there.  On the kernel
+path the TSQRT/SSRFB macro ops run as the Pallas kernels in
+:mod:`repro.kernels.tile_ops`.
+
+VMEM budget
+-----------
+Kernel backends register a :class:`KernelPolicy` carrying their VMEM
+working-set estimator *and* the budget they enforce, so the planner's
+fits-in-VMEM decisions and the kernel wrappers' runtime guards agree on
+one number (:data:`DEFAULT_VMEM_BUDGET`, via :func:`kernel_vmem_budget`).
 
 :mod:`repro.core.api` provides the thin user-facing wrappers
 (``qr`` / ``orthogonalize`` / ``lstsq`` / ``qr_algorithm_eig``).
@@ -51,6 +73,7 @@ __all__ = [
     "get_method",
     "available_methods",
     "kernel_vmem_budget",
+    "DEFAULT_VMEM_BUDGET",
     "sign_fix_qr",
     "sign_fix_r",
 ]
@@ -58,8 +81,21 @@ __all__ = [
 _MODES = ("reduced", "r", "full")
 _Q_METHODS = ("formq", "solve")
 
-# Fallback when no kernel backend registered a policy (mirrors kernels.ops).
-_DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+# The single VMEM working-set budget (half of v5e VMEM, double-buffer
+# room).  Kernel backends register policies carrying this value, so the
+# planner's fits-in-VMEM checks and the kernel wrappers' runtime guards
+# cannot drift apart.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+# Matrices at least this large on their short side (and near-square, see
+# select_method) route to the tiled task-graph backend under "auto".  The
+# upper bound keeps the symbolic task DAG tractable: task count grows as
+# O(p q min(p, q)) in the tile-grid dims, so unboundedly large inputs
+# stay on the blocked path unless the caller opts into tiled explicitly
+# (with a correspondingly larger tile).
+_TILED_MIN_DIM = 256
+_TILED_MAX_DIM = 2048
+_TILED_MAX_ASPECT = 4.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +158,8 @@ class MethodSpec:
              fields (TSQR uses it to pick ``nblocks``).
     vmem_bytes: optional ``(m, n, cfg) -> bytes`` working-set estimator
              used by the kernel dispatch policy.
+    kernel_policy: name of the :class:`KernelPolicy` whose budget gates
+             this method's kernel dispatch (default "mht_panel").
     min_aspect: required m/n ratio (TSQR needs tall-skinny input).
     """
 
@@ -134,6 +172,7 @@ class MethodSpec:
     batched: bool = True
     kernel_backed: bool = False
     vmem_bytes: Optional[Callable] = None
+    kernel_policy: str = "mht_panel"
     description: str = ""
 
 
@@ -167,8 +206,10 @@ def _ensure_builtins() -> None:
     import repro.core.mht  # noqa: F401
     import repro.core.blocked  # noqa: F401
     import repro.core.tsqr  # noqa: F401
+    import repro.core.tilegraph  # noqa: F401
     try:
         import repro.kernels.ops  # noqa: F401  (kernel policy registration)
+        import repro.kernels.tile_ops  # noqa: F401
     except ImportError:  # Pallas toolchain unavailable — jnp paths only.
         pass
 
@@ -203,9 +244,11 @@ def available_methods() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def kernel_vmem_budget() -> int:
-    pol = _KERNEL_POLICIES.get("mht_panel")
-    return pol.vmem_budget if pol is not None else _DEFAULT_VMEM_BUDGET
+def kernel_vmem_budget(policy: str = "mht_panel") -> int:
+    """The VMEM budget the named kernel backend enforces (its registered
+    :class:`KernelPolicy`), falling back to :data:`DEFAULT_VMEM_BUDGET`."""
+    pol = _KERNEL_POLICIES.get(policy)
+    return pol.vmem_budget if pol is not None else DEFAULT_VMEM_BUDGET
 
 
 # ---------------------------------------------------------------------------
@@ -246,7 +289,7 @@ def _kernel_fits(spec: MethodSpec, m: int, n: int, cfg: QRConfig,
         return False
     # Estimators are written for fp32; scale to the planned element width.
     scale = np.dtype(dtype).itemsize / 4.0
-    return est * scale <= kernel_vmem_budget()
+    return est * scale <= kernel_vmem_budget(spec.kernel_policy)
 
 
 def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = None
@@ -255,10 +298,12 @@ def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = No
 
     1. tall-skinny (aspect >= tsqr's min_aspect, default 4:1) -> TSQR,
        with ``nblocks`` chosen by the planner;
-    2. TPU and the geqrf_ht panel working set fits VMEM -> kernel-backed
+    2. large near-square (256 <= dims <= 2048, aspect < 4) -> ``tiled``
+       task-graph (cross-panel wavefront parallelism);
+    3. TPU and the geqrf_ht panel working set fits VMEM -> kernel-backed
        ``geqrf_ht``;
-    3. single-panel problems (min(m, n) <= block) -> unblocked ``geqr2_ht``;
-    4. otherwise blocked ``geqrf_ht``.
+    4. single-panel problems (min(m, n) <= block) -> unblocked ``geqr2_ht``;
+    5. otherwise blocked ``geqrf_ht``.
     """
     _ensure_builtins()
     if config.method != "auto":
@@ -269,6 +314,10 @@ def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = No
     if (tspec is not None and config.mode != "full" and n >= 1 and m >= 8
             and m >= tspec.min_aspect * n):
         return "tsqr"
+    if ("tiled" in _REGISTRY and min(m, n) >= _TILED_MIN_DIM
+            and max(m, n) <= _TILED_MAX_DIM
+            and max(m, n) < _TILED_MAX_ASPECT * min(m, n)):
+        return "tiled"
     gspec = _REGISTRY.get("geqrf_ht")
     if (backend == "tpu" and gspec is not None and config.use_kernel is not False
             and _kernel_fits(gspec, m, n, config, dtype)):

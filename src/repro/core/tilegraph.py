@@ -1,0 +1,440 @@
+"""Tiled QR task-graph runtime — tile kernels + static wavefront scheduler.
+
+The paper's thesis is that QR speed comes from (1) exposing more parallel
+operations per DAG level and (2) realizing each DAG node as a fused macro
+operation on specialized hardware (§4-§5).  The unblocked and blocked
+realizations in this package still serialize across panels: panel k+1
+cannot start until the full trailing update of panel k finished.  Tiled
+QR (Buttari et al., PLASMA) removes that barrier by decomposing the
+factorization into a DAG of *tile tasks* over an (p x q) grid of nb x nb
+tiles:
+
+    GEQRT(k)      QR of diagonal tile (k,k)          -> V1, R, T
+    LARFB(k,j)    apply Q_k^T to tile (k,j), j > k   (WY trailing update)
+    TSQRT(i,k)    QR of the stacked pair [R_kk; A_ik] (triangle on top)
+    SSRFB(k,i,j)  apply the TSQRT reflectors to the tile pair
+                  [A_kj; A_ij], j > k
+
+Tasks from *different* panels run concurrently whenever their tile
+dependencies allow — exactly the "more macro operations per DAG level"
+structure that :mod:`repro.core.dag` quantifies for HT vs MHT
+(:func:`repro.core.dag.analyze_tiled` extends the beta/theta metric to
+this DAG).
+
+Execution model: the DAG is levelized *statically* (every task's
+wavefront = 1 + max over its dependencies), and each wavefront lowers to
+JAX as a ``vmap`` over the independent same-kind tiles of that level.
+Shapes are static per wavefront, so the whole factorization traces into
+one jittable program — no runtime scheduler, the schedule IS the program.
+
+Tile kernels: GEQRT/LARFB reuse the existing Pallas kernels
+(:func:`repro.kernels.ops.mht_panel` / ``wy_trailing``); the two new
+macro ops TSQRT/SSRFB live in :mod:`repro.kernels.tile_ops` with
+``interpret=True`` CPU fallback.  ``use_kernel=False`` runs the pure-jnp
+realizations below (also the kernels' oracles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocked import larft, panel_factor, unpack_v_panel
+
+Array = jax.Array
+
+__all__ = [
+    "TileTask",
+    "TiledFactors",
+    "build_tasks",
+    "task_deps",
+    "levelize",
+    "wavefronts",
+    "wavefront_count",
+    "tile_grid",
+    "tiled_qr",
+]
+
+
+# ---------------------------------------------------------------------------
+# symbolic tile-task DAG (no jax — pure graph arithmetic)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, order=True)
+class TileTask:
+    """One macro operation on the tile grid.
+
+    kind: "GEQRT" | "LARFB" | "TSQRT" | "SSRFB"
+    k:    panel step (0 <= k < min(p, q))
+    i:    row-tile index (GEQRT/LARFB: i == k)
+    j:    column-tile index (GEQRT/TSQRT: j == k)
+    """
+
+    kind: str
+    k: int
+    i: int
+    j: int
+
+
+def tile_grid(m: int, n: int, tile: int) -> Tuple[int, int]:
+    """Tile-grid shape (p, q) covering an m x n matrix (ceil division)."""
+    if tile < 1:
+        raise ValueError(f"tile must be >= 1, got {tile}")
+    return -(-m // tile), -(-n // tile)
+
+
+def build_tasks(p: int, q: int) -> List[TileTask]:
+    """All tile tasks of a p x q grid, in a valid topological order."""
+    tasks: List[TileTask] = []
+    for k in range(min(p, q)):
+        tasks.append(TileTask("GEQRT", k, k, k))
+        tasks.extend(TileTask("LARFB", k, k, j) for j in range(k + 1, q))
+        for i in range(k + 1, p):
+            tasks.append(TileTask("TSQRT", k, i, k))
+            tasks.extend(TileTask("SSRFB", k, i, j) for j in range(k + 1, q))
+    return tasks
+
+
+def task_deps(t: TileTask) -> Tuple[TileTask, ...]:
+    """Immediate dependencies of one task (the PLASMA flat-tree DAG).
+
+    The chain structure: TSQRT(i,k) serializes in i (each updates R_kk),
+    SSRFB(k,i,j) serializes in i (each updates the top tile A_kj), and
+    every step-k task waits for the step-(k-1) update of its tiles.
+    """
+    k, i, j = t.k, t.i, t.j
+    deps: List[TileTask] = []
+    if t.kind == "GEQRT":
+        if k > 0:
+            deps.append(TileTask("SSRFB", k - 1, k, k))
+    elif t.kind == "LARFB":
+        deps.append(TileTask("GEQRT", k, k, k))
+        if k > 0:
+            deps.append(TileTask("SSRFB", k - 1, k, j))
+    elif t.kind == "TSQRT":
+        deps.append(TileTask("TSQRT", k, i - 1, k) if i > k + 1
+                    else TileTask("GEQRT", k, k, k))
+        if k > 0:
+            deps.append(TileTask("SSRFB", k - 1, i, k))
+    elif t.kind == "SSRFB":
+        deps.append(TileTask("TSQRT", k, i, k))
+        deps.append(TileTask("SSRFB", k, i - 1, j) if i > k + 1
+                    else TileTask("LARFB", k, k, j))
+        if k > 0:
+            deps.append(TileTask("SSRFB", k - 1, i, j))
+    else:
+        raise ValueError(f"unknown task kind {t.kind!r}")
+    return tuple(deps)
+
+
+def levelize(p: int, q: int) -> Dict[TileTask, int]:
+    """Wavefront index of every task: 1 + max over its dependencies."""
+    levels: Dict[TileTask, int] = {}
+    for t in build_tasks(p, q):
+        deps = task_deps(t)
+        levels[t] = 1 + max((levels[d] for d in deps), default=0)
+    return levels
+
+
+def wavefronts(p: int, q: int) -> List[List[TileTask]]:
+    """Tasks grouped by wavefront (ascending), deterministic order within."""
+    levels = levelize(p, q)
+    out: List[List[TileTask]] = [[] for _ in range(max(levels.values(), default=0))]
+    for t, lv in levels.items():
+        out[lv - 1].append(t)
+    for wf in out:
+        wf.sort()
+    return out
+
+
+def wavefront_count(p: int, q: int) -> int:
+    """Closed-form critical-path length of the p x q flat-tree tile DAG.
+
+    Derivation from the recurrences in :func:`task_deps`:
+      * q == 1: the TSQRT chain alone — p levels.
+      * p >= q: GEQRT(k) fires at 3k+1, the last TSQRT of step k at
+        (3k+1) + (p-1-k), giving p + 2q - 2 overall.
+      * p <  q: the trailing LARFB of the last step adds one level on
+        top of the square case 3p - 2, giving 3p - 1.
+    Verified against :func:`levelize` in tests/test_tilegraph.py.
+    """
+    if p < 1 or q < 1:
+        raise ValueError(f"grid must be at least 1x1, got {p}x{q}")
+    return p + 2 * q - 2 if p >= q else 3 * p - 1
+
+
+# ---------------------------------------------------------------------------
+# tile macro-op realizations (jnp path; kernels in repro.kernels.tile_ops)
+# ---------------------------------------------------------------------------
+
+def _geqrt(tile: Array, use_kernel: bool) -> Tuple[Array, Array]:
+    """QR of one diagonal tile -> (packed V1\\R, taus)."""
+    if use_kernel:
+        from repro.kernels import ops  # lazy: kernels.ref imports core
+
+        return ops.mht_panel(tile, row0=0)
+    return panel_factor(tile, 0)
+
+
+def _larfb(v1: Array, t: Array, c: Array, use_kernel: bool) -> Array:
+    """Apply Q_k^T to one tile: C - V1 (T^T (V1^T C))."""
+    if use_kernel:
+        from repro.kernels import ops
+
+        return ops.wy_trailing(v1, t, c)
+    w = t.T @ (v1.T @ c)
+    return c - v1 @ w
+
+
+def _tsqrt(r_t: Array, a_t: Array, use_kernel: bool
+           ) -> Tuple[Array, Array, Array]:
+    """Stacked-triangle QR of [R_kk; A_ik] -> (R new, V2, taus).
+
+    The top block is upper triangular, so each column's reflector is
+    ``[e_j; v2_j]``: the strict-lower top entries are exactly zero and the
+    new R comes back with zeros below its diagonal (the jnp path realizes
+    this through :func:`panel_factor` on the stacked pair; the Pallas
+    kernel in :mod:`repro.kernels.tile_ops` exploits the structure
+    directly).
+    """
+    if use_kernel:
+        from repro.kernels import tile_ops
+
+        return tile_ops.tsqrt(r_t, a_t)
+    nb = r_t.shape[0]
+    packed, taus = panel_factor(jnp.concatenate([r_t, a_t], axis=0), 0)
+    return packed[:nb], packed[nb:], taus
+
+
+def _ssrfb(v2: Array, t: Array, ck: Array, ci: Array, use_kernel: bool
+           ) -> Tuple[Array, Array]:
+    """Apply TSQRT reflectors to the tile pair [C_k; C_i] (transposed Q).
+
+    With V = [I; V2]:  W = T^T (C_k + V2^T C_i);  C_k -= W;  C_i -= V2 W.
+    """
+    if use_kernel:
+        from repro.kernels import tile_ops
+
+        return tile_ops.ssrfb(v2, t, ck, ci)
+    w = t.T @ (ck + v2.T @ ci)
+    return ck - w, ci - v2 @ w
+
+
+def _larft_stacked(v2: Array, taus: Array) -> Array:
+    """Block-reflector T for the stacked TSQRT reflectors V = [I; V2]."""
+    nb = v2.shape[1]
+    return larft(jnp.concatenate([jnp.eye(nb, dtype=v2.dtype), v2], axis=0),
+                 taus)
+
+
+# ---------------------------------------------------------------------------
+# wavefront executor
+# ---------------------------------------------------------------------------
+
+class TiledFactors(NamedTuple):
+    """Factored tile state: packed reflectors + per-task block reflectors.
+
+    tiles:  (p, q, nb, nb) — diagonal tiles hold V1 strictly below / R on
+            and above the diagonal; tiles (i, k), i > k hold the TSQRT V2;
+            tiles (k, j), j > k hold R blocks.
+    d_t:    (r, nb, nb) GEQRT block reflectors T;  d_taus: (r, nb)
+    t_t:    (p, r, nb, nb) TSQRT block reflectors; t_taus: (p, r, nb)
+    """
+
+    tiles: Array
+    d_t: Array
+    d_taus: Array
+    t_t: Array
+    t_taus: Array
+
+
+def _split_tiles(a: Array, p: int, q: int, nb: int) -> Array:
+    return a.reshape(p, nb, q, nb).transpose(0, 2, 1, 3)
+
+
+def _join_tiles(tiles: Array) -> Array:
+    p, q, nb, _ = tiles.shape
+    return tiles.transpose(0, 2, 1, 3).reshape(p * nb, q * nb)
+
+
+def _upper_mask(nb: int) -> Array:
+    rows = jnp.arange(nb)[:, None]
+    return rows <= jnp.arange(nb)[None, :]
+
+
+def _factor_wavefronts(tiles: Array, p: int, q: int, nb: int,
+                       use_kernel: bool) -> TiledFactors:
+    """Run the static schedule: one vmap per (wavefront, task kind)."""
+    r = min(p, q)
+    dt = tiles.dtype
+    d_t = jnp.zeros((r, nb, nb), dt)
+    d_taus = jnp.zeros((r, nb), dt)
+    t_t = jnp.zeros((p, r, nb, nb), dt)
+    t_taus = jnp.zeros((p, r, nb), dt)
+    upper = _upper_mask(nb)
+
+    for wf in wavefronts(p, q):
+        by_kind: Dict[str, List[TileTask]] = {}
+        for t in wf:
+            by_kind.setdefault(t.kind, []).append(t)
+
+        # All gathers below read the pre-wavefront `tiles`; true data
+        # dependencies always span wavefronts, and same-level tasks write
+        # disjoint tile regions (TSQRT merges into the upper triangle
+        # only, preserving the GEQRT V1 below the diagonal).
+        updates = []
+        if "GEQRT" in by_kind:
+            kk = jnp.array([t.k for t in by_kind["GEQRT"]])
+            packed, taus = jax.vmap(
+                lambda x: _geqrt(x, use_kernel))(tiles[kk, kk])
+            v1 = jax.vmap(lambda pk: unpack_v_panel(pk, 0))(packed)
+            d_t = d_t.at[kk].set(jax.vmap(larft)(v1, taus))
+            d_taus = d_taus.at[kk].set(taus)
+            updates.append((kk, kk, packed))
+        if "LARFB" in by_kind:
+            kk = jnp.array([t.k for t in by_kind["LARFB"]])
+            jj = jnp.array([t.j for t in by_kind["LARFB"]])
+            v1 = jax.vmap(lambda pk: unpack_v_panel(pk, 0))(tiles[kk, kk])
+            out = jax.vmap(lambda v, t, c: _larfb(v, t, c, use_kernel))(
+                v1, d_t[kk], tiles[kk, jj])
+            updates.append((kk, jj, out))
+        if "TSQRT" in by_kind:
+            kk = jnp.array([t.k for t in by_kind["TSQRT"]])
+            ii = jnp.array([t.i for t in by_kind["TSQRT"]])
+            diag = tiles[kk, kk]
+            # The diagonal tile packs V1 below its diagonal — TSQRT
+            # factors the R triangle only.
+            r_in = jnp.where(upper[None], diag, 0.0)
+            r_new, v2, taus = jax.vmap(
+                lambda rt, at: _tsqrt(rt, at, use_kernel))(r_in, tiles[ii, kk])
+            t_t = t_t.at[ii, kk].set(jax.vmap(_larft_stacked)(v2, taus))
+            t_taus = t_taus.at[ii, kk].set(taus)
+            # Merge: new R in the upper triangle, keep V1 below it.
+            merged = jnp.where(upper[None], r_new, diag)
+            updates.append((kk, kk, merged))
+            updates.append((ii, kk, v2))
+        if "SSRFB" in by_kind:
+            kk = jnp.array([t.k for t in by_kind["SSRFB"]])
+            ii = jnp.array([t.i for t in by_kind["SSRFB"]])
+            jj = jnp.array([t.j for t in by_kind["SSRFB"]])
+            ck, ci = jax.vmap(
+                lambda v, t, a, b: _ssrfb(v, t, a, b, use_kernel))(
+                    tiles[ii, kk], t_t[ii, kk], tiles[kk, jj], tiles[ii, jj])
+            updates.append((kk, jj, ck))
+            updates.append((ii, jj, ci))
+        for ri, ci_, vals in updates:
+            tiles = tiles.at[ri, ci_].set(vals)
+
+    return TiledFactors(tiles, d_t, d_taus, t_t, t_taus)
+
+
+def _form_q_tiled(f: TiledFactors, ncols: int) -> Array:
+    """Materialize Q columns by applying the task transforms in reverse.
+
+    A = G_0 T_{0,1}..T_{0,p-1} G_1 T_{1,2}.. ... R, so Q E applies the
+    per-step transforms right-to-left: TSQRT pairs top-down in reverse,
+    then the GEQRT diagonal block.  All applications are (nb x ncols)
+    row-block updates — plain jnp, the cost matches the factorization.
+    """
+    p, q, nb, _ = f.tiles.shape
+    m_pad = p * nb
+    e = jnp.eye(m_pad, ncols, dtype=f.tiles.dtype)
+
+    for k in reversed(range(min(p, q))):
+        for i in reversed(range(k + 1, p)):
+            v2, t = f.tiles[i, k], f.t_t[i, k]
+            ek, ei = e[k * nb:(k + 1) * nb], e[i * nb:(i + 1) * nb]
+            w = t @ (ek + v2.T @ ei)          # non-transposed Q
+            e = e.at[k * nb:(k + 1) * nb].set(ek - w)
+            e = e.at[i * nb:(i + 1) * nb].set(ei - v2 @ w)
+        v1 = unpack_v_panel(f.tiles[k, k], 0)
+        ek = e[k * nb:(k + 1) * nb]
+        e = e.at[k * nb:(k + 1) * nb].set(ek - v1 @ (f.d_t[k] @ (v1.T @ ek)))
+    return e
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "mode", "use_kernel"))
+def tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
+             use_kernel: bool = False):
+    """QR of ``a`` via the tiled task-graph runtime.
+
+    Non-multiple-of-tile shapes are zero-padded: padded rows/columns
+    yield exactly-zero reflector entries (degenerate ``tau = 0`` columns),
+    so the unpadded Q/R slices are the factorization of ``a`` itself.
+
+    mode: "reduced" -> (Q m x k, R k x n); "r" -> R; "full" -> (Q m x m,
+    R m x n), with k = min(m, n).
+
+    Cost note: the symbolic DAG holds O(p q min(p, q)) tasks for a p x q
+    tile grid — scale ``tile`` with the matrix so the grid stays modest
+    (the "auto" planner caps dims at 2048 for the default tile).
+    """
+    m, n = a.shape
+    p, q = tile_grid(m, n, tile)
+    nb = tile
+    pad = ((0, p * nb - m), (0, q * nb - n))
+    a_pad = jnp.pad(a, pad) if (pad[0][1] or pad[1][1]) else a
+
+    f = _factor_wavefronts(_split_tiles(a_pad, p, q, nb), p, q, nb, use_kernel)
+    k = min(m, n)
+    r_full = jnp.triu(_join_tiles(f.tiles))
+    if mode == "r":
+        return r_full[:k, :n]
+    if mode == "reduced":
+        q_mat = _form_q_tiled(f, ncols=min(p * nb, q * nb))[:m, :k]
+        return q_mat, r_full[:k, :n]
+    if mode == "full":
+        q_mat = _form_q_tiled(f, ncols=p * nb)[:m, :m]
+        return q_mat, r_full[:m, :n]
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# -- registry -----------------------------------------------------------------
+from repro.core.plan import (  # noqa: E402
+    MethodSpec, QRConfig, register_method, sign_fix_qr, sign_fix_r)
+
+
+def _resolve_tiled(m: int, n: int, cfg: QRConfig) -> QRConfig:
+    # cfg.block doubles as the tile size; never exceed the matrix itself.
+    return cfg.replace(block=min(cfg.block, m, n))
+
+
+def _solve_tiled(a: Array, cfg: QRConfig):
+    m, n = a.shape
+    tile = cfg.block  # capped at min(m, n) by the _resolve_tiled hook
+    if cfg.mode == "r":
+        r = tiled_qr(a, tile=tile, mode="r", use_kernel=bool(cfg.use_kernel))
+        return sign_fix_r(r) if cfg.sign_fix else r
+    if cfg.mode == "reduced" and cfg.q_method == "solve" and m >= n:
+        from repro.core.tsqr import triangular_inverse_apply
+
+        r = tiled_qr(a, tile=tile, mode="r", use_kernel=bool(cfg.use_kernel))
+        q = triangular_inverse_apply(a, r[:n, :n])
+    else:
+        q, r = tiled_qr(a, tile=tile, mode=cfg.mode,
+                        use_kernel=bool(cfg.use_kernel))
+    return sign_fix_qr(q, r) if cfg.sign_fix else (q, r)
+
+
+def _vmem_tiled(m: int, n: int, cfg: QRConfig) -> int:
+    """Largest per-task working set on the kernel path (one tile pair)."""
+    from repro.kernels import tile_ops
+
+    nb = min(cfg.block, m, n)
+    return max(tile_ops.vmem_bytes_tsqrt(nb), tile_ops.vmem_bytes_ssrfb(nb))
+
+
+register_method(MethodSpec(
+    name="tiled",
+    solve=_solve_tiled,
+    resolve=_resolve_tiled,
+    kernel_backed=True,
+    vmem_bytes=_vmem_tiled,
+    kernel_policy="tile_ops",
+    description="tiled task-graph QR, wavefront-scheduled tile kernels "
+                "(GEQRT/TSQRT/LARFB/SSRFB)",
+))

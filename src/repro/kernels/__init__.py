@@ -2,9 +2,11 @@
 
     mht_panel    fused VMEM-resident MHT panel factorization (DOT4 analogue)
     wy_trailing  fused WY trailing update  C - V (T^T (V^T C))
+    tile_ops     tiled-QR macro ops: TSQRT (stacked-triangle QR) and
+                 SSRFB (tile-pair block-reflector apply)
 
-``ops`` holds the jit'd public wrappers (interpret-mode on CPU), ``ref``
-the pure-jnp oracles the tests pin against.
+``ops``/``tile_ops`` hold the jit'd public wrappers (interpret-mode on
+CPU), ``ref`` the pure-jnp oracles the tests pin against.
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, ref, tile_ops  # noqa: F401

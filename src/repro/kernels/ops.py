@@ -8,6 +8,12 @@ force either with ``interpret=``.
 Padding: ``wy_trailing`` pads the C column count to the tile size and
 strips it after; ``mht_panel`` takes the panel exactly as given (the
 panel IS the block).
+
+VMEM budget: this backend registers a :class:`repro.core.plan.KernelPolicy`
+carrying its working-set estimator and the shared
+:data:`repro.core.plan.DEFAULT_VMEM_BUDGET`; the wrappers' runtime guards
+below and the planner's fits-in-VMEM decisions both read that one policy,
+so they cannot disagree.
 """
 
 from __future__ import annotations
@@ -18,14 +24,14 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import (DEFAULT_VMEM_BUDGET, KernelPolicy,
+                             register_kernel_policy)
 from repro.kernels.mht_panel import mht_panel_pallas
 from repro.kernels.wy_trailing import wy_trailing_pallas
 
 Array = jax.Array
 
 __all__ = ["mht_panel", "wy_trailing", "vmem_bytes_mht_panel", "default_interpret"]
-
-_VMEM_BUDGET = 8 * 1024 * 1024  # half of v5e VMEM, leaves double-buffer room
 
 
 def default_interpret() -> bool:
@@ -35,6 +41,18 @@ def default_interpret() -> bool:
 def vmem_bytes_mht_panel(m: int, b: int) -> int:
     """fp32 working set of the panel kernel (panel + packed copy)."""
     return 2 * m * b * 4
+
+
+# The kernel backend registers its dispatch policy (VMEM estimator +
+# budget + interpret default) with the planner, so ``method="auto"`` /
+# the ``use_kernel=None`` auto policy can decide panel-fits-VMEM
+# centrally against the very same budget enforced here.
+_POLICY = register_kernel_policy(KernelPolicy(
+    name="mht_panel",
+    vmem_bytes=vmem_bytes_mht_panel,
+    vmem_budget=DEFAULT_VMEM_BUDGET,
+    default_interpret=default_interpret,
+))
 
 
 @functools.partial(jax.jit, static_argnames=("row0", "interpret"))
@@ -51,10 +69,10 @@ def mht_panel(panel: Array, *, row0: int = 0,
     :func:`repro.kernels.ref.mht_panel_ref`.
     """
     m, b = panel.shape
-    if vmem_bytes_mht_panel(m, b) > _VMEM_BUDGET:
+    if vmem_bytes_mht_panel(m, b) > _POLICY.vmem_budget:
         raise ValueError(
             f"panel ({m},{b}) exceeds VMEM budget "
-            f"({vmem_bytes_mht_panel(m, b)} > {_VMEM_BUDGET}); "
+            f"({vmem_bytes_mht_panel(m, b)} > {_POLICY.vmem_budget}); "
             "factor via TSQR leaves instead")
     interp = default_interpret() if interpret is None else interpret
     return _mht_panel_jit(panel, row0, interp)
@@ -75,22 +93,8 @@ def wy_trailing(v: Array, t: Array, c: Array, *, bn: int = 128,
 
     Oracle: :func:`repro.kernels.ref.wy_trailing_ref`."""
     m, k = v.shape
-    if (m * bn + m * k + k * k + k * bn) * 4 > _VMEM_BUDGET:
+    if (m * bn + m * k + k * k + k * bn) * 4 > _POLICY.vmem_budget:
         raise ValueError(f"wy_trailing working set too large for VMEM: m={m} k={k} bn={bn}")
     interp = default_interpret() if interpret is None else interpret
     bn_eff = min(bn, max(8, c.shape[1]))
     return _wy_trailing_jit(v, t, c, bn_eff, interp)
-
-
-# -- registry -----------------------------------------------------------------
-# The kernel backend registers its dispatch policy (VMEM estimator + budget
-# + interpret default) with the planner, so ``method="auto"`` / the
-# ``use_kernel=None`` auto policy can decide panel-fits-VMEM centrally.
-from repro.core.plan import KernelPolicy, register_kernel_policy  # noqa: E402
-
-register_kernel_policy(KernelPolicy(
-    name="mht_panel",
-    vmem_bytes=vmem_bytes_mht_panel,
-    vmem_budget=_VMEM_BUDGET,
-    default_interpret=default_interpret,
-))

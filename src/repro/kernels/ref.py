@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-__all__ = ["mht_panel_ref", "wy_trailing_ref", "ht_update_two_pass_ref"]
+__all__ = ["mht_panel_ref", "wy_trailing_ref", "ht_update_two_pass_ref",
+           "tsqrt_ref", "ssrfb_ref"]
 
 
 def mht_panel_ref(panel: Array, row0: int = 0) -> Tuple[Array, Array]:
@@ -38,6 +39,34 @@ def wy_trailing_ref(v: Array, t: Array, c: Array) -> Array:
     w = v32.T @ c32
     w = t.astype(jnp.float32).T @ w
     return (c32 - v32 @ w).astype(dtype)
+
+
+def tsqrt_ref(r: Array, a: Array) -> Tuple[Array, Array, Array]:
+    """Oracle for :func:`repro.kernels.tile_ops.tsqrt`.
+
+    QR of the stacked pair [R; A] (R upper triangular on top) via the
+    dense MHT panel factorization; returns (R new, V2, taus).  The
+    strict-lower top entries come back exactly zero because the stacked
+    column tails are zero there, so the dense path and the structured
+    kernel agree bit-for-bit in exact arithmetic."""
+    from repro.core.blocked import panel_factor
+
+    dtype = r.dtype
+    nb = r.shape[0]
+    stacked = jnp.concatenate([r, a], axis=0).astype(jnp.float32)
+    packed, taus = panel_factor(stacked, 0, method="mht")
+    return (packed[:nb].astype(dtype), packed[nb:].astype(dtype),
+            taus.astype(dtype))
+
+
+def ssrfb_ref(v2: Array, t: Array, ck: Array, ci: Array) -> Tuple[Array, Array]:
+    """Oracle for :func:`repro.kernels.tile_ops.ssrfb`:
+    W = T^T (C_k + V2^T C_i); C_k - W; C_i - V2 W, fp32 accumulation."""
+    dtype = ck.dtype
+    v32, ck32, ci32 = (v2.astype(jnp.float32), ck.astype(jnp.float32),
+                       ci.astype(jnp.float32))
+    w = t.astype(jnp.float32).T @ (ck32 + v32.T @ ci32)
+    return (ck32 - w).astype(dtype), (ci32 - v32 @ w).astype(dtype)
 
 
 def ht_update_two_pass_ref(a: Array, v: Array, tau: Array) -> Array:

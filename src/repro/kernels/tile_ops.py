@@ -1,0 +1,236 @@
+"""Pallas TPU kernels for the tiled-QR macro ops: TSQRT and SSRFB.
+
+These are the two tile tasks the existing kernels don't cover
+(:mod:`repro.kernels.mht_panel` realizes GEQRT, ``wy_trailing`` LARFB):
+
+  * **TSQRT** — QR of the stacked pair ``[R; A]`` where R is the nb x nb
+    upper-triangular tile on top and A a full nb x nb tile below.  Each
+    column's reflector is structured ``[e_j; v2_j]``: the dot-reduce and
+    the fused update touch only the pivot row of R plus the A block, so
+    the kernel does ~half the work of a dense 2nb-tall panel
+    factorization and both tiles stay VMEM-resident across all nb
+    columns (the paper's LM-resident macro-op argument, §5.1, applied to
+    the tile-DAG node).
+  * **SSRFB** — apply the TSQRT block reflector to a tile pair:
+    with V = [I; V2],  W = T^T (C_k + V2^T C_i),  C_k -= W,  C_i -= V2 W.
+    Four chained MXU products fused into one VMEM pass per tile pair.
+
+Both kernels are single-grid-cell (the tile IS the block, like
+``mht_panel``); the wavefront scheduler in :mod:`repro.core.tilegraph`
+vmaps them over the independent tiles of each DAG level.  Oracles:
+:func:`repro.kernels.ref.tsqrt_ref` / ``ssrfb_ref``; interpret mode runs
+the bodies on CPU (the default off-TPU, as in :mod:`repro.kernels.ops`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.plan import (DEFAULT_VMEM_BUDGET, KernelPolicy,
+                             register_kernel_policy)
+from repro.kernels.ops import default_interpret
+
+Array = jax.Array
+
+__all__ = [
+    "tsqrt",
+    "ssrfb",
+    "tsqrt_kernel",
+    "ssrfb_kernel",
+    "vmem_bytes_tsqrt",
+    "vmem_bytes_ssrfb",
+]
+
+
+def vmem_bytes_tsqrt(nb: int) -> int:
+    """fp32 working set: R + A in, R + V2 out, plus the loop carries."""
+    return 6 * nb * nb * 4
+
+
+def vmem_bytes_ssrfb(nb: int) -> int:
+    """fp32 working set: V2/T/C_k/C_i in, two tiles out, W scratch."""
+    return 7 * nb * nb * 4
+
+
+def _vmem_bytes_tile(nb: int, _b: int = 0) -> int:
+    """Worst-case per-tile working set across both macro ops (the policy
+    contract is (m, b); tiles are square so only the first dim is used)."""
+    return max(vmem_bytes_tsqrt(nb), vmem_bytes_ssrfb(nb))
+
+
+_POLICY = register_kernel_policy(KernelPolicy(
+    name="tile_ops",
+    vmem_bytes=_vmem_bytes_tile,
+    vmem_budget=DEFAULT_VMEM_BUDGET,
+    default_interpret=default_interpret,
+))
+
+
+# ---------------------------------------------------------------------------
+# TSQRT
+# ---------------------------------------------------------------------------
+
+def tsqrt_kernel(r_ref, a_ref, r_out, v_out, taus_ref):
+    """Kernel body: factor the VMEM-resident [R; A] stack in place.
+
+    r_ref/a_ref: (nb, nb) input tiles (R upper triangular)
+    r_out:       (nb, nb) updated R (zeros below the diagonal)
+    v_out:       (nb, nb) V2 — reflector tails, column j in column j
+    taus_ref:    (1, nb) tau row
+    """
+    nb = r_ref.shape[0]
+    r0 = r_ref[...].astype(jnp.float32)
+    a0 = a_ref[...].astype(jnp.float32)
+    rows = lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+    cols = lax.broadcasted_iota(jnp.int32, (1, nb), 1)
+
+    def body(j, carry):
+        r, a, vacc, taus = carry
+        colmask = cols == j                                     # (1, nb)
+        pivmask = (rows == j) & colmask                         # (nb, nb)
+        x0 = jnp.sum(jnp.where(pivmask, r, 0.0))                # pivot R[j,j]
+        x2 = jnp.sum(jnp.where(colmask, a, 0.0), axis=1,
+                     keepdims=True)                             # (nb, 1)
+        tail2 = jnp.sum(x2 * x2)
+        norm = jnp.sqrt(x0 * x0 + tail2)
+        beta = jnp.where(x0 >= 0.0, -norm, norm)
+        degen = tail2 == 0.0
+        denom = jnp.where(degen, 1.0, x0 - beta)
+        v2 = x2 / denom                                         # (nb, 1)
+        tau = jnp.where(
+            degen, 0.0, (beta - x0) / jnp.where(beta == 0.0, 1.0, beta))
+        beta_val = jnp.where(degen, x0, beta)
+
+        # Structured macro-op: the reflector is [e_j; v2], so the dot
+        # touches only R's row j plus the A block — one fused pass.
+        rrow = jnp.sum(jnp.where(rows == j, r, 0.0), axis=0,
+                       keepdims=True)                           # (1, nb)
+        w = tau * (rrow + jnp.sum(v2 * a, axis=0, keepdims=True))
+        trailing = cols > j
+        r = r - jnp.where((rows == j) & trailing, w, 0.0)
+        a = a - jnp.where(trailing, v2 * w, 0.0)
+
+        r = jnp.where(pivmask, beta_val, r)
+        vacc = jnp.where(colmask, v2, vacc)
+        taus = jnp.where(colmask, tau, taus)
+        return r, a, vacc, taus
+
+    r_fin, _, vacc, taus = lax.fori_loop(
+        0, nb, body,
+        (r0, a0, jnp.zeros((nb, nb), jnp.float32),
+         jnp.zeros((1, nb), jnp.float32)))
+    r_out[...] = r_fin.astype(r_out.dtype)
+    v_out[...] = vacc.astype(v_out.dtype)
+    taus_ref[...] = taus.astype(taus_ref.dtype)
+
+
+def tsqrt_pallas(r_t: Array, a_t: Array, *, interpret: bool = False
+                 ) -> Tuple[Array, Array, Array]:
+    """Invoke the TSQRT kernel on one tile pair (single grid cell)."""
+    nb = r_t.shape[0]
+    r_new, v2, taus = pl.pallas_call(
+        tsqrt_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, nb), r_t.dtype),
+            jax.ShapeDtypeStruct((nb, nb), r_t.dtype),
+            jax.ShapeDtypeStruct((1, nb), r_t.dtype),
+        ],
+        in_specs=[
+            pl.BlockSpec((nb, nb), lambda: (0, 0)),
+            pl.BlockSpec((nb, nb), lambda: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb, nb), lambda: (0, 0)),
+            pl.BlockSpec((nb, nb), lambda: (0, 0)),
+            pl.BlockSpec((1, nb), lambda: (0, 0)),
+        ],
+        interpret=interpret,
+    )(r_t, a_t)
+    return r_new, v2, taus[0]
+
+
+# ---------------------------------------------------------------------------
+# SSRFB
+# ---------------------------------------------------------------------------
+
+def ssrfb_kernel(v_ref, t_ref, ck_ref, ci_ref, ck_out, ci_out):
+    """One tile pair: W = T^T (C_k + V2^T C_i); C_k -= W; C_i -= V2 W."""
+    v2 = v_ref[...]
+    ck = ck_ref[...].astype(jnp.float32)
+    ci = ci_ref[...]
+    w = ck + jnp.dot(v2.T, ci, preferred_element_type=jnp.float32)
+    w = jnp.dot(t_ref[...].T.astype(jnp.float32), w,
+                preferred_element_type=jnp.float32)
+    ck_out[...] = (ck - w).astype(ck_out.dtype)
+    ci_out[...] = (ci.astype(jnp.float32)
+                   - jnp.dot(v2.astype(jnp.float32), w,
+                             preferred_element_type=jnp.float32)
+                   ).astype(ci_out.dtype)
+
+
+def ssrfb_pallas(v2: Array, t: Array, ck: Array, ci: Array, *,
+                 interpret: bool = False) -> Tuple[Array, Array]:
+    """Invoke the SSRFB kernel on one tile pair (single grid cell)."""
+    nb = v2.shape[0]
+    spec = pl.BlockSpec((nb, nb), lambda: (0, 0))
+    return pl.pallas_call(
+        ssrfb_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, nb), ck.dtype),
+            jax.ShapeDtypeStruct((nb, nb), ci.dtype),
+        ],
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        interpret=interpret,
+    )(v2, t, ck, ci)
+
+
+# ---------------------------------------------------------------------------
+# jit'd public wrappers (dispatch pattern mirrors repro.kernels.ops)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _tsqrt_jit(r_t: Array, a_t: Array, interpret: bool):
+    return tsqrt_pallas(r_t, a_t, interpret=interpret)
+
+
+def tsqrt(r_t: Array, a_t: Array, *, interpret: bool | None = None
+          ) -> Tuple[Array, Array, Array]:
+    """Stacked-triangle QR of [R; A] -> (R new, V2, taus).
+
+    Oracle: :func:`repro.kernels.ref.tsqrt_ref`."""
+    nb = r_t.shape[0]
+    if r_t.shape != a_t.shape or r_t.shape[1] != nb:
+        raise ValueError(
+            f"tsqrt expects square same-shape tiles, got {r_t.shape} / {a_t.shape}")
+    if vmem_bytes_tsqrt(nb) > _POLICY.vmem_budget:
+        raise ValueError(
+            f"tile ({nb},{nb}) exceeds VMEM budget "
+            f"({vmem_bytes_tsqrt(nb)} > {_POLICY.vmem_budget}); shrink the tile")
+    interp = _POLICY.default_interpret() if interpret is None else interpret
+    return _tsqrt_jit(r_t, a_t, interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _ssrfb_jit(v2: Array, t: Array, ck: Array, ci: Array, interpret: bool):
+    return ssrfb_pallas(v2, t, ck, ci, interpret=interpret)
+
+
+def ssrfb(v2: Array, t: Array, ck: Array, ci: Array, *,
+          interpret: bool | None = None) -> Tuple[Array, Array]:
+    """Apply TSQRT reflectors to the tile pair [C_k; C_i].
+
+    Oracle: :func:`repro.kernels.ref.ssrfb_ref`."""
+    nb = v2.shape[0]
+    if vmem_bytes_ssrfb(nb) > _POLICY.vmem_budget:
+        raise ValueError(
+            f"tile ({nb},{nb}) exceeds VMEM budget "
+            f"({vmem_bytes_ssrfb(nb)} > {_POLICY.vmem_budget}); shrink the tile")
+    interp = _POLICY.default_interpret() if interpret is None else interpret
+    return _ssrfb_jit(v2, t, ck, ci, interp)

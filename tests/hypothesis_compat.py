@@ -1,6 +1,13 @@
 """Property-testing shim: real `hypothesis` when installed, else a
 deterministic fallback so tier-1 collects and runs without the dev extra.
 
+Shared example budget: tier-1 must stay fast, so BOTH paths cap
+``max_examples`` through one profile knob — the ``REPRO_MAX_EXAMPLES``
+environment variable (default 8).  Test modules keep their historical
+``@settings(max_examples=N)`` annotations as *upper bounds*; the
+effective count is ``min(N, REPRO_MAX_EXAMPLES)``.  The full-suite CI
+job raises the knob to run the complete sweeps.
+
 The fallback implements just the surface this suite uses —
 ``@settings(max_examples=..., deadline=...)`` stacked on
 ``@given(name=st.integers(...)/st.floats(...)/...)`` — by drawing a fixed
@@ -13,10 +20,33 @@ Usage in test modules:
     from hypothesis_compat import given, settings, st
 """
 
+import os
+
+# One shared example budget for the whole suite (tier-1 speed knob).
+MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_MAX_EXAMPLES", "8"))
+
 try:
-    from hypothesis import given, settings, strategies as st
+    import hypothesis
+    from hypothesis import given, strategies as st
 
     HAVE_HYPOTHESIS = True
+
+    # The shared profile: every test without explicit @settings draws at
+    # most the cap; deadline off (jit compile times dwarf any deadline).
+    hypothesis.settings.register_profile(
+        "repro", max_examples=MAX_EXAMPLES_CAP, deadline=None)
+    hypothesis.settings.load_profile("repro")
+
+    def settings(*, max_examples=None, **kwargs):
+        """`hypothesis.settings` with the module-level count capped by the
+        shared profile budget (explicit counts are upper bounds)."""
+        if max_examples is not None:
+            max_examples = min(max_examples, MAX_EXAMPLES_CAP)
+        else:
+            max_examples = MAX_EXAMPLES_CAP
+        kwargs.setdefault("deadline", None)
+        return hypothesis.settings(max_examples=max_examples, **kwargs)
+
 except ImportError:
     HAVE_HYPOTHESIS = False
 
@@ -27,7 +57,7 @@ except ImportError:
 
     # Keep fallback runs cheap: property bodies here re-jit per drawn shape,
     # so a handful of deterministic examples is the right CI trade.
-    _FALLBACK_MAX_EXAMPLES = 5
+    _FALLBACK_MAX_EXAMPLES = min(5, MAX_EXAMPLES_CAP)
 
     class _Strategy:
         def __init__(self, draw):

@@ -1,6 +1,7 @@
 """Parallelism quantification tests — paper §4 eq. 6-10, fig 9."""
 
-from repro.core.dag import analyze_ht, analyze_mht, phase_model_theta, theta_curve
+from repro.core.dag import (analyze_ht, analyze_mht, analyze_tiled,
+                            phase_model_theta, theta_curve, tiled_curve)
 
 
 def test_mht_dag_is_strictly_shallower():
@@ -39,3 +40,13 @@ def test_width4_phase_model_matches_paper_constant():
 def test_phase_model_levels_positive_and_ordered():
     pm = phase_model_theta(64)
     assert 0 < pm["levels_mht"] < pm["levels_ht"]
+
+
+def test_tiled_beta_extends_the_metric():
+    """The tile DAG exposes (far) more scalar work per level than MHT,
+    and its level count is the closed-form wavefront count."""
+    rows = tiled_curve((64, 128), tile=16)["rows"]
+    assert all(r["beta_gain_tiled"] > 1.0 for r in rows)
+    tl = analyze_tiled(64, 16)
+    assert tl.depth == 10  # 4x4 grid: p + 2q - 2
+    assert tl.ops > analyze_mht(64).ops / 2  # same O(n^3) work regime

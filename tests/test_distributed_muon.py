@@ -5,6 +5,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -54,6 +56,7 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_distributed_qr_muon_subprocess():
     res = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,

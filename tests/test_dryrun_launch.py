@@ -65,6 +65,7 @@ _DRYRUN_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_reduced_mesh_dryrun_subprocess():
     """lower + compile + memory/cost/collective extraction on a small mesh
     — exercises the exact dryrun.py code path used for the 512-chip run."""

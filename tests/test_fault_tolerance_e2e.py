@@ -7,6 +7,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 _SCRIPT = textwrap.dedent("""
     import os, tempfile
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -54,6 +56,7 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_elastic_restart_subprocess():
     res = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,

@@ -12,7 +12,7 @@ from hypothesis_compat import given, settings, st
 
 from repro.core import geqr2_ht, geqrf
 from repro.core.blocked import larft, panel_factor, unpack_v_panel
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, tile_ops
 
 
 def _rand(shape, dtype=jnp.float32, seed=0):
@@ -145,6 +145,90 @@ def test_property_wy_trailing(m, k, n, seed):
     np.testing.assert_allclose(
         np.asarray(ops.wy_trailing(v, t, c)),
         np.asarray(ref.wy_trailing_ref(v, t, c)), atol=5e-5)
+
+
+# ------------------------------------------------ tile ops (TSQRT / SSRFB)
+
+def _tsqrt_inputs(nb, seed):
+    r = jnp.triu(_rand((nb, nb), seed=seed))
+    a = _rand((nb, nb), seed=seed + 1)
+    return r, a
+
+
+@pytest.mark.parametrize("nb", [4, 8, 16, 32])
+def test_tsqrt_matches_ref(nb):
+    r, a = _tsqrt_inputs(nb, seed=nb)
+    rk, vk, tk = tile_ops.tsqrt(r, a)
+    rr, vr, tr = ref.tsqrt_ref(r, a)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(tk), np.asarray(tr), atol=3e-5)
+    # structured output: the updated R stays exactly upper triangular
+    assert float(jnp.linalg.norm(jnp.tril(rk, -1))) == 0.0
+
+
+def test_tsqrt_reduces_stacked_pair():
+    """[R; A] = Q [R'; 0]: R' must match the QR of the stacked pair."""
+    nb = 16
+    r, a = _tsqrt_inputs(nb, seed=3)
+    rk, _, _ = tile_ops.tsqrt(r, a)
+    rn = jnp.linalg.qr(jnp.concatenate([r, a], axis=0))[1]
+    s = jnp.sign(jnp.diagonal(rk)) * jnp.sign(jnp.diagonal(rn))
+    np.testing.assert_allclose(np.asarray(rk * s[:, None]), np.asarray(rn),
+                               atol=3e-5)
+
+
+def test_tsqrt_degenerate_zero_tail():
+    """A zero A-tile must pass R through untouched (all tau = 0)."""
+    nb = 8
+    r = jnp.triu(_rand((nb, nb), seed=4))
+    rk, vk, tk = tile_ops.tsqrt(r, jnp.zeros((nb, nb), jnp.float32))
+    np.testing.assert_allclose(np.asarray(tk), np.zeros(nb), atol=0)
+    np.testing.assert_allclose(np.asarray(vk), np.zeros((nb, nb)), atol=0)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(r), atol=1e-6)
+
+
+@pytest.mark.parametrize("nb", [4, 8, 16, 32])
+def test_ssrfb_matches_ref(nb):
+    from repro.core.tilegraph import _larft_stacked
+
+    r, a = _tsqrt_inputs(nb, seed=nb + 7)
+    _, v2, taus = ref.tsqrt_ref(r, a)
+    t = _larft_stacked(v2, taus)
+    ck, ci = _rand((nb, nb), seed=1), _rand((nb, nb), seed=2)
+    ck_k, ci_k = tile_ops.ssrfb(v2, t, ck, ci)
+    ck_r, ci_r = ref.ssrfb_ref(v2, t, ck, ci)
+    np.testing.assert_allclose(np.asarray(ck_k), np.asarray(ck_r), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(ci_k), np.asarray(ci_r), atol=3e-5)
+
+
+def test_tile_ops_vmem_guards():
+    big = 2048  # 6 * 2048^2 * 4 bytes > the shared 8 MiB budget
+    z = jnp.zeros((big, big), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        tile_ops.tsqrt(z, z)
+    with pytest.raises(ValueError, match="VMEM"):
+        tile_ops.ssrfb(z, z, z, z)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nb=st.integers(2, 24), seed=st.integers(0, 10_000))
+def test_property_tsqrt_ssrfb(nb, seed):
+    from repro.core.tilegraph import _larft_stacked
+
+    rng = np.random.default_rng(seed)
+    r = jnp.triu(jnp.asarray(rng.standard_normal((nb, nb)), jnp.float32))
+    a = jnp.asarray(rng.standard_normal((nb, nb)), jnp.float32)
+    rk, vk, tk = tile_ops.tsqrt(r, a)
+    rr, vr, tr = ref.tsqrt_ref(r, a)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), atol=5e-5)
+    t = _larft_stacked(vr, tr)
+    c = jnp.asarray(rng.standard_normal((2, nb, nb)), jnp.float32)
+    out_k = tile_ops.ssrfb(vr, t, c[0], c[1])
+    out_r = ref.ssrfb_ref(vr, t, c[0], c[1])
+    for ok, orf in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(ok), np.asarray(orf), atol=5e-5)
 
 
 # ------------------------------------------------- end-to-end kernel geqrf

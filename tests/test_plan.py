@@ -57,11 +57,12 @@ def test_unknown_method_errors():
 def test_builtins_registered():
     methods = available_methods()
     for name in ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "geqrf_fori",
-                 "tsqr"):
+                 "tsqr", "tiled"):
         assert name in methods
     assert get_method("tsqr").min_aspect == 4.0
     assert not get_method("tsqr").supports_full_q
     assert get_method("geqrf_ht").kernel_backed
+    assert get_method("tiled").kernel_backed
 
 
 # ------------------------------------------------------------------ QRConfig
@@ -121,6 +122,37 @@ def test_auto_skips_kernel_when_panel_exceeds_vmem():
     assert solver.config.use_kernel is False
 
 
+# The full auto routing table in one place: (shape, backend) -> method.
+@pytest.mark.parametrize("shape,backend,expected", [
+    ((1024, 32), "cpu", "tsqr"),        # tall-skinny beats everything
+    ((1024, 256), "cpu", "tsqr"),       # exactly 4:1 is still TSQR
+    ((512, 512), "cpu", "tiled"),       # large near-square -> task graph
+    ((512, 512), "tpu", "tiled"),
+    ((1023, 256), "cpu", "tiled"),      # aspect just under 4
+    ((300, 280), "cpu", "tiled"),
+    ((2048, 1024), "cpu", "tiled"),     # at the tiled ceiling
+    ((2049, 1024), "cpu", "geqrf_ht"),  # past it: DAG would be too big
+    ((40000, 16384), "tpu", "geqrf_ht"),
+    ((256, 128), "tpu", "geqrf_ht"),    # min dim below the tiled floor
+    ((256, 128), "cpu", "geqrf_ht"),
+    ((255, 255), "cpu", "geqrf_ht"),    # one short of the floor
+    ((256, 40000), "cpu", "geqrf_ht"),  # wide but far from square
+    ((24, 16), "cpu", "geqr2_ht"),      # single panel
+])
+def test_auto_routing_table(shape, backend, expected):
+    assert select_method(shape, jnp.float32, QRConfig(),
+                         backend=backend) == expected
+
+
+def test_auto_picks_tiled_for_large_near_square():
+    solver = plan((512, 512), jnp.float32, QRConfig(), backend="cpu")
+    assert solver.config.method == "tiled"
+    assert solver.config.use_kernel is False  # jnp path off-TPU
+    solver_tpu = plan((512, 512), jnp.float32, QRConfig(), backend="tpu")
+    assert solver_tpu.config.method == "tiled"
+    assert solver_tpu.config.use_kernel is True  # tile pair fits VMEM
+
+
 def test_auto_small_problems_use_unblocked_mht():
     assert select_method((24, 16), jnp.float32, QRConfig()) == "geqr2_ht"
 
@@ -136,6 +168,19 @@ def test_auto_never_picks_tsqr_for_full_mode():
     assert solver.config.method != "tsqr"
     q, r = solver.solve(_rand(1024, 32, seed=3))
     assert q.shape == (1024, 1024) and r.shape == (1024, 32)
+
+
+def test_kernel_policy_single_vmem_budget():
+    """Planner decisions and kernel runtime guards read one budget."""
+    from repro.core.plan import DEFAULT_VMEM_BUDGET, kernel_vmem_budget
+    from repro.kernels import ops, tile_ops
+
+    assert kernel_vmem_budget() == DEFAULT_VMEM_BUDGET
+    assert kernel_vmem_budget("mht_panel") == ops._POLICY.vmem_budget
+    assert kernel_vmem_budget("tile_ops") == tile_ops._POLICY.vmem_budget
+    assert ops._POLICY.vmem_budget == tile_ops._POLICY.vmem_budget
+    # unknown policies fall back to the shared default
+    assert kernel_vmem_budget("nope") == DEFAULT_VMEM_BUDGET
 
 
 def test_capability_checks():

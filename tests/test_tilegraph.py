@@ -1,0 +1,211 @@
+"""Tiled QR task-graph runtime tests.
+
+Covers the symbolic tile DAG (level counts vs the closed-form wavefront
+formula, dependency sanity), the wavefront executor against the
+``jnp.linalg.qr`` oracle (including non-multiple-of-tile shapes, wide
+inputs and every mode), the Pallas tile-kernel path in interpret mode,
+the planner integration, and the extended beta parallelism metric.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import QRConfig, plan, qr
+from repro.core.dag import analyze_mht, analyze_tiled
+from repro.core.tilegraph import (
+    build_tasks,
+    levelize,
+    task_deps,
+    tile_grid,
+    tiled_qr,
+    wavefront_count,
+    wavefronts,
+)
+
+
+def _rand(m, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+
+
+def _check(a, q, r, atol=1e-5):
+    m, n = a.shape
+    k = min(m, n)
+    rec = float(jnp.linalg.norm(q @ r - a) / jnp.linalg.norm(a))
+    orth = float(jnp.abs(q.T @ q - jnp.eye(q.shape[1], dtype=a.dtype)).max())
+    assert rec <= atol, f"reconstruction {rec} > {atol}"
+    assert orth <= atol, f"orthogonality {orth} > {atol}"
+    assert float(jnp.linalg.norm(jnp.tril(r[:, :k], -1))) == 0.0
+
+
+# ------------------------------------------------------------- symbolic DAG
+
+def test_wavefront_count_matches_levelization():
+    """Closed form p + 2q - 2 (p >= q) / 3p - 1 (p < q) vs the DAG."""
+    for p in range(1, 9):
+        for q in range(1, 9):
+            assert len(wavefronts(p, q)) == wavefront_count(p, q), (p, q)
+
+
+def test_task_counts():
+    """Task census: r GEQRT, per-step trailing LARFB/TSQRT/SSRFB blocks."""
+    for p, q in [(1, 1), (4, 4), (6, 3), (3, 6)]:
+        tasks = build_tasks(p, q)
+        r = min(p, q)
+        by_kind = {}
+        for t in tasks:
+            by_kind[t.kind] = by_kind.get(t.kind, 0) + 1
+        assert by_kind.get("GEQRT", 0) == r
+        assert by_kind.get("LARFB", 0) == sum(q - 1 - k for k in range(r))
+        assert by_kind.get("TSQRT", 0) == sum(p - 1 - k for k in range(r))
+        assert by_kind.get("SSRFB", 0) == sum(
+            (p - 1 - k) * (q - 1 - k) for k in range(r))
+
+
+def test_levels_respect_dependencies():
+    """Every task fires strictly after all of its dependencies."""
+    for p, q in [(4, 4), (5, 3), (3, 5)]:
+        levels = levelize(p, q)
+        for t in build_tasks(p, q):
+            for d in task_deps(t):
+                assert levels[d] < levels[t], (t, d)
+
+
+def test_wavefront_parallelism_exceeds_one():
+    """The DAG must actually expose cross-panel parallelism: some
+    wavefront carries tasks from more than one panel step k."""
+    wfs = wavefronts(4, 4)
+    assert any(len({t.k for t in wf}) > 1 for wf in wfs)
+    assert max(len(wf) for wf in wfs) >= 4
+
+
+def test_tile_grid():
+    assert tile_grid(64, 64, 16) == (4, 4)
+    assert tile_grid(65, 33, 16) == (5, 3)
+    with pytest.raises(ValueError):
+        tile_grid(8, 8, 0)
+    with pytest.raises(ValueError):
+        wavefront_count(0, 3)
+
+
+# ------------------------------------------------------ executor vs oracle
+
+TILED_SHAPES = [(16, 16, 16), (48, 48, 16), (64, 32, 16), (32, 64, 16),
+                (50, 34, 16), (37, 23, 8), (96, 96, 32)]
+
+
+@pytest.mark.parametrize("m,n,tile", TILED_SHAPES)
+def test_tiled_qr_matches_oracle(m, n, tile):
+    a = _rand(m, n, seed=m * 100 + n)
+    q, r = tiled_qr(a, tile=tile)
+    k = min(m, n)
+    assert q.shape == (m, k) and r.shape == (k, n)
+    _check(a, q, r)
+    # R matches LAPACK up to column signs
+    rn = jnp.linalg.qr(a)[1]
+    s = jnp.sign(jnp.diagonal(r[:k, :k])) * jnp.sign(jnp.diagonal(rn[:k, :k]))
+    np.testing.assert_allclose(np.asarray(r * s[:, None]), np.asarray(rn),
+                               atol=5e-5 * np.sqrt(m))
+
+
+def test_tiled_qr_r_mode_and_full_mode():
+    a = _rand(40, 24, seed=3)
+    r_only = tiled_qr(a, tile=16, mode="r")
+    _, r_red = tiled_qr(a, tile=16, mode="reduced")
+    np.testing.assert_array_equal(np.asarray(r_only), np.asarray(r_red))
+    qf, rf = tiled_qr(a, tile=16, mode="full")
+    assert qf.shape == (40, 40) and rf.shape == (40, 24)
+    _check(a, qf, rf, atol=2e-5)
+
+
+def test_tiled_qr_kernel_path_matches_jnp_path():
+    """tile_ops Pallas kernels (interpret on CPU) vs the pure-jnp path."""
+    a = _rand(64, 48, seed=7)
+    qk, rk = tiled_qr(a, tile=16, use_kernel=True)
+    qj, rj = tiled_qr(a, tile=16, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(qk), np.asarray(qj), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rj), atol=3e-5)
+
+
+def test_tiled_qr_degenerate_rank_deficient():
+    """Zero and rank-1 inputs: reflector application keeps Q exactly
+    orthonormal where LAPACK semantics allow (tau=0 degenerate columns)."""
+    a = jnp.zeros((32, 32), jnp.float32)
+    q, r = tiled_qr(a, tile=16)
+    assert float(jnp.linalg.norm(r)) == 0.0
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(32), atol=1e-6)
+
+
+# --------------------------------------------------- acceptance (512 x 512)
+
+def test_tiled_qr_512_acceptance():
+    """PR acceptance: 512x512 f32 via QRConfig(method="tiled") with
+    relative reconstruction and orthogonality error <= 1e-5 on CPU."""
+    a = _rand(512, 512, seed=11)
+    q, r = qr(a, config=QRConfig(method="tiled", block=128))
+    _check(a, q, r, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_tiled_qr_512_default_block():
+    """Same acceptance with the planner-default tile size (32)."""
+    a = _rand(512, 512, seed=12)
+    q, r = qr(a, config=QRConfig(method="tiled"))
+    _check(a, q, r, atol=1e-5)
+
+
+# ------------------------------------------------------ planner integration
+
+def test_plan_tiled_resolves_and_solves():
+    a = _rand(96, 64, seed=5)
+    solver = plan(a.shape, a.dtype, QRConfig(method="tiled", block=32))
+    assert solver.config.method == "tiled"
+    q, r = solver.solve(a)
+    _check(a, q, r)
+
+
+def test_plan_tiled_caps_tile_at_matrix():
+    solver = plan((24, 16), jnp.float32, QRConfig(method="tiled", block=64))
+    assert solver.config.block == 16  # resolve hook: tile <= min(m, n)
+    a = _rand(24, 16, seed=6)
+    q, r = solver.solve(a)
+    _check(a, q, r)
+
+
+def test_tiled_batched_solve():
+    a = jnp.stack([_rand(48, 32, seed=s) for s in (1, 2, 3)])
+    solver = plan(a.shape, a.dtype, QRConfig(method="tiled", block=16))
+    qb, rb = solver.solve(a)
+    assert qb.shape == (3, 48, 32) and rb.shape == (3, 32, 32)
+    for i in range(3):
+        _check(a[i], qb[i], rb[i])
+
+
+def test_tiled_sign_fix_and_q_method_solve():
+    a = _rand(64, 48, seed=8)
+    q1, r1 = plan(a.shape, a.dtype,
+                  QRConfig(method="tiled", block=16, sign_fix=True)).solve(a)
+    assert bool((jnp.diagonal(r1) >= 0).all())
+    _check(a, q1, r1)
+    q2, _ = plan(a.shape, a.dtype,
+                 QRConfig(method="tiled", block=16, q_method="solve")).solve(a)
+    np.testing.assert_allclose(np.asarray(q2.T @ q2), np.eye(48), atol=1e-4)
+
+
+# --------------------------------------------------- beta metric extension
+
+def test_analyze_tiled_beats_mht_beta():
+    """Acceptance: strictly more ops per DAG level than unblocked MHT for
+    n >= 64 with >= 4x4 tile grids."""
+    for n, tile in [(64, 16), (128, 16), (128, 32), (256, 32)]:
+        p = -(-n // tile)
+        assert p >= 4
+        tl = analyze_tiled(n, tile)
+        mht = analyze_mht(n)
+        assert tl.beta > mht.beta, (n, tile, tl.beta, mht.beta)
+
+
+def test_analyze_tiled_depth_is_wavefront_count():
+    assert analyze_tiled(64, 16).depth == wavefront_count(4, 4)
+    assert analyze_tiled(100, 16).depth == wavefront_count(7, 7)

@@ -25,6 +25,7 @@ def _data_cfg(cfg, batch=8, seq=64):
                       d_model=cfg.d_model)
 
 
+@pytest.mark.slow
 def test_trainer_loss_decreases():
     cfg = get_smoke_config("smollm-135m")
     tr = Trainer(cfg, TrainConfig(optimizer="muon-qr", lr=0.02),
@@ -35,6 +36,7 @@ def test_trainer_loss_decreases():
     assert losses[-1] < losses[0] - 1.0
 
 
+@pytest.mark.slow
 def test_trainer_restart_is_bitexact_continuation():
     """Crash/restart: resumed run must produce the same next batches and
     continue from the checkpointed state."""
@@ -90,6 +92,7 @@ def test_microbatch_equivalence():
         assert max(jax.tree.leaves(diffs)) < 1e-4
 
 
+@pytest.mark.slow
 def test_training_with_compression_converges():
     cfg = get_smoke_config("smollm-135m")
     tr = Trainer(cfg, TrainConfig(optimizer="adamw", lr=2e-3,
@@ -102,6 +105,7 @@ def test_training_with_compression_converges():
     assert np.isfinite(losses).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "xlstm-1.3b"])
 def test_trainer_runs_recurrent_archs(arch):
     cfg = get_smoke_config(arch)
