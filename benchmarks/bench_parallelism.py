@@ -8,12 +8,15 @@ Rebuilds the HT and MHT DAGs symbolically and reports
 and extends the same beta = ops/levels metric to the tiled wavefront
 DAG (:func:`repro.core.dag.analyze_tiled`), where a level is one
 wavefront of macro tile tasks — the cross-panel parallelism the paper's
-§5.2 PE tiling targets.
+§5.2 PE tiling targets — and further to the multi-device sharded
+schedule (:func:`repro.core.dag.analyze_sharded_tiled`), where the
+domains of the tile grid run concurrently across devices and a level is
+one cross-device wavefront.
 """
 
 import time
 
-from repro.core.dag import theta_curve, tiled_curve
+from repro.core.dag import sharded_curve, theta_curve, tiled_curve
 
 
 def run() -> list:
@@ -23,6 +26,9 @@ def run() -> list:
     t1 = time.time()
     trows = tiled_curve((64, 128, 256), tile=16)["rows"]
     dt_tiled = (time.time() - t1) * 1e6 / len(trows)
+    t2 = time.time()
+    srows = sharded_curve((128, 256, 512), tile=16, ndomains=4)["rows"]
+    dt_sharded = (time.time() - t2) * 1e6 / len(srows)
     out = []
     for r in rows:
         out.append((f"fig9_theta_n{r['n']}", dt,
@@ -36,4 +42,11 @@ def run() -> list:
                     f"beta_mht={r['beta_mht']:.1f};"
                     f"gain_tiled={r['beta_gain_tiled']:.1f};"
                     f"wavefronts={r['tiled_levels']}"))
+    for r in srows:
+        out.append((f"fig9_sharded_n{r['n']}_d{r['ndomains']}", dt_sharded,
+                    f"beta_sharded={r['beta_sharded']:.1f};"
+                    f"beta_tiled={r['beta_tiled']:.1f};"
+                    f"gain_sharded={r['beta_gain_sharded']:.1f};"
+                    f"level_gain={r['level_gain']:.2f};"
+                    f"wavefronts={r['sharded_levels']}"))
     return out

@@ -1,16 +1,22 @@
 """QR method sweep — the perf-trajectory benchmark behind BENCH_qr.json.
 
 Times every registered realization (including the tiled task-graph
-backend) over a shape/dtype grid and derives effective GFLOP/s from the
-standard thin-QR flop count 2 n^2 (m - n/3).  ``benchmarks/run.py``
-serializes the records to ``BENCH_qr.json`` so the trajectory is
-comparable across PRs; ``--smoke`` shrinks the grid for CI (it exists to
-catch interpret-mode regressions in the Pallas tile ops on CPU, not to
-measure).
+backend and the multi-device sharded_tiled backend) over a shape/dtype
+grid and derives effective GFLOP/s from the standard thin-QR flop count
+2 n^2 (m - n/3).  ``benchmarks/run.py`` serializes the records to
+``BENCH_qr.json`` so the trajectory is comparable across PRs; ``--smoke``
+shrinks the grid for CI (it exists to catch interpret-mode regressions
+in the Pallas tile ops on CPU, not to measure).
+
+sharded_tiled records sweep the available domain counts (device count x
+shape): on a 1-device host that is the d=1 degenerate row; under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` the sweep records
+the scaling trajectory over d in {1, 2, 4, 8}.
 """
 
 import time
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 
@@ -19,8 +25,18 @@ from repro.core import QRConfig, plan  # noqa: F401
 # (method, block) x shapes; tsqr only runs where its 4:1 aspect holds.
 _FULL_SHAPES = [(256, 256), (512, 512), (512, 128), (1024, 128), (1024, 256)]
 _SMOKE_SHAPES = [(96, 96), (128, 64), (256, 32)]
-_METHODS = ["geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr", "tiled"]
+_METHODS = ["geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr", "tiled",
+            "sharded_tiled"]
 _DTYPES = [jnp.float32]
+
+
+def _domain_counts():
+    """Power-of-two domain counts up to the local device count."""
+    d, out = 1, []
+    while d <= jax.local_device_count():
+        out.append(d)
+        d *= 2
+    return out
 
 # Smoke mode also exercises the Pallas kernel paths in interpret mode.
 _SMOKE_KERNEL_METHODS = ("geqrf_ht", "tiled")
@@ -55,23 +71,40 @@ def sweep(smoke: bool = False) -> list:
         for dtype in _DTYPES:
             a = jnp.asarray(rng.standard_normal((m, n)), dtype)
             for method in _METHODS:
-                cfgs = [(method, QRConfig(method=method, mode="r",
-                                          block=64 if method == "tiled" else 32))]
+                blk = 64 if method in ("tiled", "sharded_tiled") else 32
+                if method == "sharded_tiled":
+                    # device count x shape: one record per *effective*
+                    # domain count (small grids cap d — don't re-time
+                    # the same resolved config under different labels)
+                    from repro.core.distgraph import effective_domains
+
+                    eff = sorted({effective_domains(m, n, blk, d)
+                                  for d in _domain_counts()})
+                    cfgs = [(f"{method}@d{d}",
+                             QRConfig(method=method, mode="r", block=blk,
+                                      ndomains=d))
+                            for d in eff]
+                else:
+                    cfgs = [(method, QRConfig(method=method, mode="r",
+                                              block=blk))]
                 if smoke and method in _SMOKE_KERNEL_METHODS:
                     cfgs.append((f"{method}+kernel", QRConfig(
-                        method=method, mode="r", use_kernel=True,
-                        block=64 if method == "tiled" else 32)))
+                        method=method, mode="r", use_kernel=True, block=blk)))
                 for label, cfg in cfgs:
                     try:
                         solver = plan(a.shape, a.dtype, cfg)
                     except ValueError:  # capability mismatch (tsqr aspect)
                         continue
                     dt = _time_solve(solver, a, reps)
-                    records.append(dict(
+                    rec = dict(
                         method=label, m=m, n=n, dtype=str(np.dtype(dtype)),
                         wall_us=dt * 1e6,
                         gflops=_qr_flops(m, n) / dt / 1e9,
-                    ))
+                    )
+                    if method == "sharded_tiled":
+                        rec.update(ndevices=jax.local_device_count(),
+                                   ndomains=solver.config.ndomains)
+                    records.append(rec)
     return records
 
 

@@ -5,12 +5,29 @@ from __future__ import annotations
 import jax
 from jax import lax
 
-__all__ = ["axis_size", "shard_map"]
+__all__ = ["axis_size", "shard_map", "shard_map_unchecked"]
 
 if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
 else:  # pre-0.6 jax keeps it in experimental
     from jax.experimental.shard_map import shard_map
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the output-replication check disabled.
+
+    Needed when the body contains ops without a replication rule
+    (``pallas_call`` — the tile-kernel path of the sharded tiled QR);
+    callers must guarantee replicated outputs themselves (e.g. via
+    ``lax.pmax``).  The flag was renamed ``check_rep`` -> ``check_vma``
+    across jax versions, hence the compat shim.
+    """
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
 
 
 def axis_size(axis_name) -> int:

@@ -7,8 +7,10 @@ Layers:
     tsqr         communication-avoiding distributed QR over mesh axes
     tilegraph    tiled task-graph QR: GEQRT/TSQRT/LARFB/SSRFB tile DAG,
                  statically wavefront-scheduled (cross-panel parallelism)
+    distgraph    multi-device sharded tiled QR: per-device row-block
+                 wavefront domains (shard_map) + TSQR-style R merge tree
     dag          beta/theta parallelism quantification (paper fig 9),
-                 extended to the tiled wavefront DAG (analyze_tiled)
+                 extended to the tiled/sharded wavefront DAGs
     plan         QRConfig + method registry + plan() -> QRSolver
     api          qr() / orthogonalize() / lstsq() / qr_algorithm_eig()
 
@@ -33,7 +35,13 @@ from repro.core.plan import (
     plan,
     register_method,
 )
-from repro.core.tilegraph import tiled_qr, wavefront_count, wavefronts
+from repro.core.tilegraph import (
+    sharded_wavefront_count,
+    tiled_qr,
+    wavefront_count,
+    wavefronts,
+)
+from repro.core.distgraph import sharded_tiled_qr
 from repro.core.tsqr import distributed_qr, tsqr_qr, tsqr_r, tsqr_tree_sharded
 
 __all__ = [
@@ -44,4 +52,5 @@ __all__ = [
     "house_vector", "apply_q", "form_q", "unpack_r", "unpack_v", "mht_update",
     "tsqr_r", "tsqr_qr", "tsqr_tree_sharded", "distributed_qr",
     "tiled_qr", "wavefronts", "wavefront_count",
+    "sharded_tiled_qr", "sharded_wavefront_count",
 ]

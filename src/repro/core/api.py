@@ -16,8 +16,13 @@ Every realization lives in the method registry (see
     "tsqr"       tall-skinny tree QR (single device)
     "tiled"      tiled task-graph QR, wavefront-scheduled tile kernels
                  (GEQRT/TSQRT/LARFB/SSRFB; block = tile size)
+    "sharded_tiled"  multi-device tiled QR: per-device row-block
+                 wavefront domains via shard_map + TSQR-style R merge
+                 tree (ndomains = device domains; testable on CPU with
+                 XLA_FLAGS=--xla_force_host_platform_device_count=8)
     "auto"       planner heuristics: tall-skinny => tsqr, large
-                 near-square => tiled, panel-fits-VMEM on TPU =>
+                 near-square => tiled, past the tiled ceiling with >1
+                 device => sharded_tiled, panel-fits-VMEM on TPU =>
                  kernel-backed geqrf_ht, single panel => geqr2_ht
 
 Selection, batching (vmap over leading dims), and the Pallas kernel

@@ -33,7 +33,8 @@ from typing import Tuple
 import numpy as np
 
 __all__ = ["DagStats", "analyze_ht", "analyze_mht", "analyze_tiled",
-           "theta_curve", "tiled_curve"]
+           "analyze_sharded_tiled", "theta_curve", "tiled_curve",
+           "sharded_curve"]
 
 
 @dataclasses.dataclass
@@ -182,6 +183,17 @@ def _ssrfb_ops(nb: int) -> int:
     return 6 * nb**3 + 2 * nb**2   # three GEMMs + two tile subtracts
 
 
+def _tiled_grid_ops(p: int, q: int, tile: int) -> int:
+    """Total scalar ops of the flat-tree tile DAG on a p x q grid."""
+    ops = 0
+    for k in range(min(p, q)):
+        ops += _geqrt_ops(tile)
+        ops += (q - 1 - k) * _larfb_ops(tile)
+        ops += (p - 1 - k) * _tsqrt_ops(tile)
+        ops += (p - 1 - k) * (q - 1 - k) * _ssrfb_ops(tile)
+    return ops
+
+
 def analyze_tiled(n: int, tile: int = 16) -> DagStats:
     """DAG stats for the tiled task-graph QR on an n x n matrix.
 
@@ -199,13 +211,65 @@ def analyze_tiled(n: int, tile: int = 16) -> DagStats:
     from repro.core.tilegraph import tile_grid, wavefront_count
 
     p, q = tile_grid(n, n, tile)
-    ops = 0
-    for k in range(min(p, q)):
-        ops += _geqrt_ops(tile)
-        ops += (q - 1 - k) * _larfb_ops(tile)
-        ops += (p - 1 - k) * _tsqrt_ops(tile)
-        ops += (p - 1 - k) * (q - 1 - k) * _ssrfb_ops(tile)
-    return DagStats(ops=ops, depth=wavefront_count(p, q))
+    return DagStats(ops=_tiled_grid_ops(p, q, tile),
+                    depth=wavefront_count(p, q))
+
+
+def _merge_ops(n: int) -> int:
+    """Scalar ops of one butterfly-merge node: QR of two stacked n x n
+    triangles.  Column j touches ~2(j+1) structurally-nonzero rows."""
+    return sum(_qr_column_ops(2 * (j + 1), n - 1 - j) for j in range(n))
+
+
+def analyze_sharded_tiled(n: int, tile: int = 16, ndomains: int = 4
+                          ) -> DagStats:
+    """DAG stats for the multi-device sharded tiled QR on an n x n matrix.
+
+    The schedule (:mod:`repro.core.distgraph`) runs d independent
+    row-block domains — each a (p/d x q) flat-tree tile DAG — then a
+    binary merge tree of stacked-triangle QR nodes over the per-domain R
+    factors.  A level is one cross-device wavefront
+    (:func:`repro.core.tilegraph.sharded_wavefront_count`): depth drops
+    from p + 2q - 2 to p/d + 2q - 2 + ceil(log2 d) while ops gain only
+    the (d - 1) merge nodes, so beta = ops/levels rises with d — the
+    paper's more-macro-ops-per-level thesis extended across devices.
+
+    Like the executor, domain counts round down to a power of two and
+    cap at the tile-row count; p pads up to d * ceil(p/d).
+    """
+    from repro.core.tilegraph import (
+        sharded_wavefront_count, tile_grid, wavefront_count)
+
+    p, q = tile_grid(n, n, tile)
+    d = max(1, min(ndomains, p))
+    # round down to a power of two, matching the executor (canonical
+    # helper: repro.distributed.sharding.largest_pow2 — inlined here to
+    # keep dag.py jax-free)
+    d = 1 << (d.bit_length() - 1)
+    if d == 1:
+        return DagStats(ops=_tiled_grid_ops(p, q, tile),
+                        depth=wavefront_count(p, q))
+    p_dom = -(-p // d)
+    ops = d * _tiled_grid_ops(p_dom, q, tile) + (d - 1) * _merge_ops(n)
+    return DagStats(ops=ops, depth=sharded_wavefront_count(p, q, d))
+
+
+def sharded_curve(sizes: Tuple[int, ...] = (128, 256, 512),
+                  tile: int = 16, ndomains: int = 4) -> dict:
+    """beta of the sharded schedule vs the single-device tiled DAG per
+    matrix size (the multi-device extension of :func:`tiled_curve`)."""
+    rows = []
+    for n in sizes:
+        tl = analyze_tiled(n, tile)
+        sh = analyze_sharded_tiled(n, tile, ndomains)
+        rows.append(dict(
+            n=n, tile=tile, ndomains=ndomains,
+            sharded_ops=sh.ops, sharded_levels=sh.depth,
+            beta_sharded=sh.beta, beta_tiled=tl.beta,
+            beta_gain_sharded=sh.beta / tl.beta,
+            level_gain=tl.depth / sh.depth,
+        ))
+    return {"rows": rows}
 
 
 def tiled_curve(sizes: Tuple[int, ...] = (64, 128, 256),

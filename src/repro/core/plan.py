@@ -19,9 +19,10 @@ call sites:
   * :func:`plan` — resolve ``(shape, dtype, config)`` to a concrete
     :class:`QRSolver`, applying the ``method="auto"`` heuristics
     (tall-skinny => TSQR with planner-chosen ``nblocks``, large
-    near-square => tiled task-graph, panel-fits-VMEM on TPU =>
-    kernel-backed ``geqrf_ht``, single-panel problems => unblocked MHT)
-    and the kernel dispatch policy.
+    near-square => tiled task-graph, near-square past the single-device
+    tiled ceiling with more than one device => sharded_tiled,
+    panel-fits-VMEM on TPU => kernel-backed ``geqrf_ht``, single-panel
+    problems => unblocked MHT) and the kernel dispatch policy.
   * :class:`QRSolver` — ``solve`` / ``factor`` / ``lstsq`` on concrete
     shapes, with batched inputs (``a.ndim > 2``) handled by a vmap rule.
 
@@ -37,6 +38,20 @@ near-square matrices (dims in [256, 2048], aspect < 4 — the upper bound
 keeps the symbolic DAG small at the default tile) there.  On the kernel
 path the TSQRT/SSRFB macro ops run as the Pallas kernels in
 :mod:`repro.kernels.tile_ops`.
+
+Sharded tiled QR (multi-device)
+-------------------------------
+``method="sharded_tiled"`` (:mod:`repro.core.distgraph`) distributes
+the tile grid across a 1-D device mesh: each device runs domain-local
+wavefronts on its contiguous row-block of tiles under ``shard_map``,
+and the per-domain R factors merge through a TSQR-style butterfly tree
+(cross-device critical path O(p/d + 2q + log d) wavefronts).
+``QRConfig.ndomains`` requests the domain count (default: all local
+devices; execution rounds down to a power of two and caps at the
+tile-row count — ``ndomains=1`` IS the tiled backend, bit for bit).
+``method="auto"`` routes near-square matrices past the single-device
+tiled ceiling there when more than one device is available.  Runs on
+CPU with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 VMEM budget
 -----------
@@ -97,6 +112,13 @@ _TILED_MIN_DIM = 256
 _TILED_MAX_DIM = 2048
 _TILED_MAX_ASPECT = 4.0
 
+# Near-square matrices past the single-device tiled ceiling route to the
+# multi-device sharded_tiled backend when more than one device is
+# available: each device owns a contiguous row-block domain of the tile
+# grid (its local DAG stays within the single-device budget) and the
+# domains merge through a TSQR-style reduction tree over R factors.
+_SHARDED_MAX_DOM_FACTOR = 8  # auto ceiling: _TILED_MAX_DIM * min(d, factor)
+
 
 @dataclasses.dataclass(frozen=True)
 class QRConfig:
@@ -119,6 +141,12 @@ class QRConfig:
                 exact even for singular input) or "solve" (Q = A R^{-1},
                 one dense op; tall matrices only)
     refine:     CQR2-style second pass for TSQR thin-Q orthogonality
+    ndomains:   device-domain count for ``sharded_tiled`` (row-block
+                domains of the tile grid, one per device); None => the
+                planner uses every local device.  Execution rounds down
+                to a power of two and caps at the available device count
+                and the tile-row count; ``ndomains=1`` is exactly the
+                single-device tiled backend.
     """
 
     method: str = "auto"
@@ -130,6 +158,7 @@ class QRConfig:
     mode: str = "reduced"
     q_method: str = "formq"
     refine: bool = True
+    ndomains: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -141,6 +170,8 @@ class QRConfig:
             raise ValueError(f"block must be >= 1, got {self.block}")
         if self.nblocks is not None and self.nblocks < 1:
             raise ValueError(f"nblocks must be >= 1, got {self.nblocks}")
+        if self.ndomains is not None and self.ndomains < 1:
+            raise ValueError(f"ndomains must be >= 1, got {self.ndomains}")
 
     def replace(self, **changes) -> "QRConfig":
         return dataclasses.replace(self, **changes)
@@ -207,6 +238,7 @@ def _ensure_builtins() -> None:
     import repro.core.blocked  # noqa: F401
     import repro.core.tsqr  # noqa: F401
     import repro.core.tilegraph  # noqa: F401
+    import repro.core.distgraph  # noqa: F401
     try:
         import repro.kernels.ops  # noqa: F401  (kernel policy registration)
         import repro.kernels.tile_ops  # noqa: F401
@@ -292,32 +324,44 @@ def _kernel_fits(spec: MethodSpec, m: int, n: int, cfg: QRConfig,
     return est * scale <= kernel_vmem_budget(spec.kernel_policy)
 
 
-def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = None
-                  ) -> str:
+def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = None,
+                  ndevices: Optional[int] = None) -> str:
     """The ``method="auto"`` routing table (trailing two dims of shape).
 
     1. tall-skinny (aspect >= tsqr's min_aspect, default 4:1) -> TSQR,
        with ``nblocks`` chosen by the planner;
     2. large near-square (256 <= dims <= 2048, aspect < 4) -> ``tiled``
        task-graph (cross-panel wavefront parallelism);
-    3. TPU and the geqrf_ht panel working set fits VMEM -> kernel-backed
+    3. near-square but past the single-device tiled ceiling, with more
+       than one device available (``ndevices``, default
+       ``jax.local_device_count()``) -> ``sharded_tiled``: per-device
+       row-block domains + a TSQR-style R merge tree, up to
+       ``_TILED_MAX_DIM * min(ndevices, 8)`` on the long side;
+    4. TPU and the geqrf_ht panel working set fits VMEM -> kernel-backed
        ``geqrf_ht``;
-    4. single-panel problems (min(m, n) <= block) -> unblocked ``geqr2_ht``;
-    5. otherwise blocked ``geqrf_ht``.
+    5. single-panel problems (min(m, n) <= block) -> unblocked ``geqr2_ht``;
+    6. otherwise blocked ``geqrf_ht``.
     """
     _ensure_builtins()
     if config.method != "auto":
         return config.method
     m, n = int(shape[-2]), int(shape[-1])
     backend = jax.default_backend() if backend is None else backend
+    ndevices = jax.local_device_count() if ndevices is None else int(ndevices)
     tspec = _REGISTRY.get("tsqr")
     if (tspec is not None and config.mode != "full" and n >= 1 and m >= 8
             and m >= tspec.min_aspect * n):
         return "tsqr"
-    if ("tiled" in _REGISTRY and min(m, n) >= _TILED_MIN_DIM
-            and max(m, n) <= _TILED_MAX_DIM
-            and max(m, n) < _TILED_MAX_ASPECT * min(m, n)):
+    near_square = (min(m, n) >= _TILED_MIN_DIM
+                   and max(m, n) < _TILED_MAX_ASPECT * min(m, n))
+    if "tiled" in _REGISTRY and near_square and max(m, n) <= _TILED_MAX_DIM:
         return "tiled"
+    if ("sharded_tiled" in _REGISTRY and near_square and config.mode != "full"
+            and len(shape) == 2  # no batched support (shard_map under vmap)
+            and m >= n and ndevices > 1
+            and max(m, n) <= _TILED_MAX_DIM * min(ndevices,
+                                                  _SHARDED_MAX_DOM_FACTOR)):
+        return "sharded_tiled"
     gspec = _REGISTRY.get("geqrf_ht")
     if (backend == "tpu" and gspec is not None and config.use_kernel is not False
             and _kernel_fits(gspec, m, n, config, dtype)):
@@ -328,12 +372,15 @@ def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = No
 
 
 def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
-         backend: Optional[str] = None) -> "QRSolver":
+         backend: Optional[str] = None,
+         ndevices: Optional[int] = None) -> "QRSolver":
     """Resolve ``(shape, dtype, config)`` to a concrete :class:`QRSolver`.
 
     ``shape`` may carry leading batch dims; planning uses the trailing
     matrix dims and the solver vmaps over the rest.  ``backend`` overrides
-    ``jax.default_backend()`` for the kernel policy (useful in tests).
+    ``jax.default_backend()`` for the kernel policy, ``ndevices``
+    overrides ``jax.local_device_count()`` for the sharded routing (both
+    useful in tests).
     """
     _ensure_builtins()
     cfg = QRConfig() if config is None else config
@@ -343,7 +390,7 @@ def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
     batched = len(shape) > 2
     backend = jax.default_backend() if backend is None else backend
 
-    name = select_method(shape, dtype, cfg, backend=backend)
+    name = select_method(shape, dtype, cfg, backend=backend, ndevices=ndevices)
     spec = get_method(name)
 
     if batched and not spec.batched:

@@ -57,6 +57,10 @@ __all__ = [
     "wavefront_count",
     "tile_grid",
     "tiled_qr",
+    "domain_rows",
+    "domain_wavefronts",
+    "merge_levels",
+    "sharded_wavefront_count",
 ]
 
 
@@ -165,6 +169,75 @@ def wavefront_count(p: int, q: int) -> int:
     if p < 1 or q < 1:
         raise ValueError(f"grid must be at least 1x1, got {p}x{q}")
     return p + 2 * q - 2 if p >= q else 3 * p - 1
+
+
+# ---------------------------------------------------------------------------
+# domain-aware DAG metadata (multi-device sharded schedule, core.distgraph)
+# ---------------------------------------------------------------------------
+#
+# The sharded runtime partitions the p x q tile grid into d contiguous
+# row-block *domains*, one per device.  Each domain runs the ordinary
+# flat-tree wavefront schedule on its own (p_i x q) sub-grid — fully
+# independent of the other domains — and the per-domain R factors merge
+# through a TSQR-style binary reduction tree (ceil(log2 d) rounds).  The
+# cross-device critical path is therefore
+#
+#     wavefront_count(ceil(p / d), q) + ceil(log2 d)
+#
+# i.e. O(p/d + 2q + log d) wavefronts instead of the single-device
+# O(p + 2q) — the DAG exposes d-way *domain* parallelism on top of the
+# per-wavefront tile parallelism.
+
+def domain_rows(p: int, d: int) -> Tuple[Tuple[int, int], ...]:
+    """Contiguous per-domain tile-row ranges ``((start, stop), ...)``.
+
+    Balanced split of p tile rows over d domains; when p is not divisible
+    by d the first ``p % d`` domains carry one extra tile row (the
+    executor instead zero-pads rows so every device gets ``ceil(p / d)``
+    — padding rows factor to exact-zero reflectors, see
+    :func:`tiled_qr`).  Requires ``1 <= d <= p``.
+    """
+    if d < 1 or d > p:
+        raise ValueError(f"need 1 <= d <= p, got d={d}, p={p}")
+    base, extra = divmod(p, d)
+    out, start = [], 0
+    for i in range(d):
+        stop = start + base + (1 if i < extra else 0)
+        out.append((start, stop))
+        start = stop
+    return tuple(out)
+
+
+def domain_wavefronts(p: int, q: int, d: int) -> List[List[List[TileTask]]]:
+    """Per-domain wavefront schedules: ``out[i]`` is the wavefront list of
+    domain i's local (p_i x q) tile DAG (task indices are domain-local).
+    Domains are mutually independent — level L of every domain runs
+    concurrently across devices."""
+    return [wavefronts(stop - start, q) if stop > start else []
+            for start, stop in domain_rows(p, d)]
+
+
+def merge_levels(d: int) -> int:
+    """Depth of the binary R-merge reduction tree over d domains."""
+    if d < 1:
+        raise ValueError(f"need d >= 1, got {d}")
+    return (d - 1).bit_length()
+
+
+def sharded_wavefront_count(p: int, q: int, d: int) -> int:
+    """Closed-form cross-device critical path of the d-domain schedule.
+
+    The executor pads p up to ``d * ceil(p / d)`` tile rows so every
+    domain has the same local grid; the critical path is the (tallest)
+    local schedule plus the merge-tree rounds.  ``d=1`` degenerates to
+    :func:`wavefront_count` exactly (no merge levels).
+    """
+    if d < 1:
+        raise ValueError(f"need d >= 1, got {d}")
+    if d == 1:
+        return wavefront_count(p, q)
+    p_dom = -(-p // d)
+    return wavefront_count(p_dom, q) + merge_levels(d)
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,7 @@ __all__ = [
     "tsqr_r",
     "tsqr_qr",
     "tsqr_tree_sharded",
+    "butterfly_merge_r",
     "distributed_qr",
     "triangular_inverse_apply",
     "default_nblocks",
@@ -113,24 +114,25 @@ def tsqr_qr(a: Array, *, nblocks: int = 4, refine: bool = True,
 # shard_map collective versions
 # ---------------------------------------------------------------------------
 
-def tsqr_tree_sharded(a_local: Array, axis_name: str, *, qr_block: int = 32,
-                      use_kernel: bool = False) -> Array:
-    """Global R of a row-sharded tall matrix, from inside ``shard_map``.
+def butterfly_merge_r(r: Array, axis_name: str, combine) -> Array:
+    """Merge per-shard (n x n) R factors into the global R, from inside
+    ``shard_map`` — the TSQR combine tree, factored out so other sharded
+    backends (the ``sharded_tiled`` task-graph runtime) reuse it.
 
     Butterfly tree: at round r every shard exchanges its current (n x n) R
     with the partner ``rank XOR 2^r`` (``lax.ppermute``), stacks the pair
-    and re-factors.  After log2(P) rounds all shards hold the identical
-    global R — no broadcast needed.  Per-round traffic is one n x n
-    triangle per link, vs. P triangles for an all-gather TSQR.
+    and re-factors via ``combine((2n x n) stack) -> (n x n) R``.  After
+    log2(P) rounds all shards hold the identical global R — no broadcast
+    needed.  Per-round traffic is one n x n triangle per link, vs. P
+    triangles for an all-gather TSQR.
 
     Requires the mesh axis size to be a power of two (all production
-    meshes here are 16/32-way).
+    meshes here are 16/32-way; the sharded-tiled planner rounds its
+    domain count down to a power of two).
     """
     p = axis_size(axis_name)
     if p & (p - 1):
-        raise ValueError(f"tsqr_tree_sharded needs power-of-two axis, got {p}")
-    n = a_local.shape[1]
-    r = _local_r(a_local, qr_block=qr_block, use_kernel=use_kernel)
+        raise ValueError(f"butterfly_merge_r needs power-of-two axis, got {p}")
     rounds = p.bit_length() - 1
     for level in range(rounds):
         stride = 1 << level
@@ -142,12 +144,25 @@ def tsqr_tree_sharded(a_local: Array, axis_name: str, *, qr_block: int = 32,
         first = jnp.where((idx & stride) == 0, 1, 0)
         top = jnp.where(first, r, r_partner)
         bot = jnp.where(first, r_partner, r)
-        r = _local_r(jnp.concatenate([top, bot], axis=0), qr_block=qr_block,
-                     use_kernel=use_kernel)
+        r = combine(jnp.concatenate([top, bot], axis=0))
     # Every shard now holds the identical global R, but the type system
     # cannot infer that; a pmax over bitwise-identical values is an exact
     # no-op that makes the replication provable (n^2 bytes, negligible).
     return lax.pmax(r, axis_name)
+
+
+def tsqr_tree_sharded(a_local: Array, axis_name: str, *, qr_block: int = 32,
+                      use_kernel: bool = False) -> Array:
+    """Global R of a row-sharded tall matrix, from inside ``shard_map``.
+
+    Local blocked-MHT R per shard, then the :func:`butterfly_merge_r`
+    combine tree; every shard finishes with the identical global R.
+    """
+    r = _local_r(a_local, qr_block=qr_block, use_kernel=use_kernel)
+    return butterfly_merge_r(
+        r, axis_name,
+        lambda stack: _local_r(stack, qr_block=qr_block,
+                               use_kernel=use_kernel))
 
 
 def distributed_qr(a_local: Array, axis_name: str, *, refine: bool = True,

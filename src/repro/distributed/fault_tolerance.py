@@ -23,6 +23,8 @@ from typing import Callable, List, Optional, Sequence
 import jax
 from jax.sharding import Mesh
 
+from repro.distributed.sharding import largest_pow2 as _largest_pow2_leq
+
 __all__ = ["StepWatchdog", "plan_elastic_mesh", "ElasticPlan"]
 
 
@@ -69,13 +71,6 @@ class ElasticPlan:
     data_size: int
     model_size: int
     dropped_devices: int
-
-
-def _largest_pow2_leq(n: int) -> int:
-    p = 1
-    while p * 2 <= n:
-        p *= 2
-    return p
 
 
 def plan_elastic_mesh(devices: Sequence, *, failed: Sequence[int] = (),

@@ -26,12 +26,57 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["MeshRules", "param_specs", "param_shardings", "state_specs",
            "batch_specs", "cache_specs", "tree_shardings",
-           "activation_policy", "constrain_hidden", "constrain_logits"]
+           "activation_policy", "constrain_hidden", "constrain_logits",
+           "largest_pow2", "row_domain_mesh", "row_domain_specs",
+           "QR_DOMAIN_AXIS"]
 
 # weight names whose FIRST dim is the TP (model) dim: projections back to
 # d_model — their contraction dim (ff/heads) is tensor-parallel.
 _DOWN_TYPE = ("down", "wo", "out_proj", "out", "down_w")
 _EXCLUDE_MODEL = ("router", "shared_gate", "qnorm", "knorm")
+
+# ------------------------------------------------------- QR domain meshes
+#
+# The sharded tiled-QR backend (repro.core.distgraph) runs one row-block
+# domain of the tile grid per device over a 1-D mesh.  These helpers are
+# the mesh/spec plumbing it shares with tests and benchmarks; they use a
+# dedicated axis name so a QR domain mesh never collides with the
+# training meshes' "data"/"model" axes.
+
+QR_DOMAIN_AXIS = "qr_domain"
+
+
+def largest_pow2(n: int) -> int:
+    """Largest power of two <= n (n >= 1) — butterfly trees need 2^k
+    participants, so domain counts round down."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    return 1 << (int(n).bit_length() - 1)
+
+
+def row_domain_mesh(ndomains: int, *, devices=None,
+                    axis: str = QR_DOMAIN_AXIS) -> Mesh:
+    """1-D mesh of ``ndomains`` devices for row-block domain execution.
+
+    Uses the first ``ndomains`` of ``devices`` (default
+    ``jax.devices()``), so a QR mesh can coexist with a larger training
+    mesh; callers cap ``ndomains`` at the available device count.
+    """
+    devices = jax.devices() if devices is None else list(devices)
+    if ndomains < 1 or ndomains > len(devices):
+        raise ValueError(
+            f"need 1 <= ndomains <= {len(devices)} devices, got {ndomains}")
+    return Mesh(np.asarray(devices[:ndomains]), (axis,))
+
+
+def row_domain_specs(*, axis: str = QR_DOMAIN_AXIS
+                     ) -> Tuple[P, P, Tuple[P, P]]:
+    """(in_spec, r_out_spec, (q_out_spec, r_out_spec)) for shard_map'ing a
+    row-sharded QR: the matrix rows over the domain axis, the merged R
+    replicated, the thin Q row-sharded like the input."""
+    rows = P(axis, None)
+    replicated = P()
+    return rows, replicated, (rows, replicated)
 
 
 @dataclasses.dataclass(frozen=True)

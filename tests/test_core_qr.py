@@ -29,10 +29,8 @@ from repro.core.householder import geqr2_explicit_p
 
 SHAPES = [(8, 8), (16, 8), (12, 5), (33, 17), (32, 32), (64, 48), (48, 64)]
 
-
-def _rand(m, n, seed=0):
-    rng = np.random.default_rng(seed)
-    return jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+# Shared deterministic matrix factory (tests/conftest.py).
+from conftest import gaussian as _rand  # noqa: E402
 
 
 def _check_qr(a, packed, taus, rtol=3e-5):

@@ -1,7 +1,8 @@
 """Parallelism quantification tests — paper §4 eq. 6-10, fig 9."""
 
-from repro.core.dag import (analyze_ht, analyze_mht, analyze_tiled,
-                            phase_model_theta, theta_curve, tiled_curve)
+from repro.core.dag import (analyze_ht, analyze_mht, analyze_sharded_tiled,
+                            analyze_tiled, phase_model_theta, sharded_curve,
+                            theta_curve, tiled_curve)
 
 
 def test_mht_dag_is_strictly_shallower():
@@ -50,3 +51,30 @@ def test_tiled_beta_extends_the_metric():
     tl = analyze_tiled(64, 16)
     assert tl.depth == 10  # 4x4 grid: p + 2q - 2
     assert tl.ops > analyze_mht(64).ops / 2  # same O(n^3) work regime
+
+
+def test_sharded_beta_extends_the_metric_across_devices():
+    """Domain sharding collapses levels (p/d + 2q + log d wavefronts)
+    while ops only gain the merge nodes -> beta grows with d."""
+    from repro.core.tilegraph import sharded_wavefront_count, tile_grid
+
+    for n, tile, d in [(128, 16, 4), (256, 16, 8), (256, 32, 2)]:
+        tl = analyze_tiled(n, tile)
+        sh = analyze_sharded_tiled(n, tile, d)
+        p, q = tile_grid(n, n, tile)
+        assert sh.depth == sharded_wavefront_count(p, q, d)
+        assert sh.depth < tl.depth
+        assert sh.ops > tl.ops  # merge tree adds work...
+        assert sh.beta > tl.beta  # ...but levels shrink faster
+
+
+def test_sharded_d1_is_tiled():
+    """One domain: identical DagStats to the single-device analysis."""
+    tl, sh = analyze_tiled(128, 16), analyze_sharded_tiled(128, 16, 1)
+    assert (sh.ops, sh.depth) == (tl.ops, tl.depth)
+
+
+def test_sharded_curve_rows():
+    rows = sharded_curve((128, 256), tile=16, ndomains=4)["rows"]
+    assert all(r["beta_gain_sharded"] > 1.0 for r in rows)
+    assert all(r["level_gain"] > 1.0 for r in rows)

@@ -15,9 +15,8 @@ from repro.core.blocked import larft, panel_factor, unpack_v_panel
 from repro.kernels import ops, ref, tile_ops
 
 
-def _rand(shape, dtype=jnp.float32, seed=0):
-    rng = np.random.default_rng(seed)
-    return jnp.asarray(rng.standard_normal(shape), dtype)
+# Shared deterministic matrix factory (tests/conftest.py).
+from conftest import randn as _rand  # noqa: E402
 
 
 # ---------------------------------------------------------------- mht_panel

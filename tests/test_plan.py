@@ -122,26 +122,52 @@ def test_auto_skips_kernel_when_panel_exceeds_vmem():
     assert solver.config.use_kernel is False
 
 
-# The full auto routing table in one place: (shape, backend) -> method.
-@pytest.mark.parametrize("shape,backend,expected", [
-    ((1024, 32), "cpu", "tsqr"),        # tall-skinny beats everything
-    ((1024, 256), "cpu", "tsqr"),       # exactly 4:1 is still TSQR
-    ((512, 512), "cpu", "tiled"),       # large near-square -> task graph
-    ((512, 512), "tpu", "tiled"),
-    ((1023, 256), "cpu", "tiled"),      # aspect just under 4
-    ((300, 280), "cpu", "tiled"),
-    ((2048, 1024), "cpu", "tiled"),     # at the tiled ceiling
-    ((2049, 1024), "cpu", "geqrf_ht"),  # past it: DAG would be too big
-    ((40000, 16384), "tpu", "geqrf_ht"),
-    ((256, 128), "tpu", "geqrf_ht"),    # min dim below the tiled floor
-    ((256, 128), "cpu", "geqrf_ht"),
-    ((255, 255), "cpu", "geqrf_ht"),    # one short of the floor
-    ((256, 40000), "cpu", "geqrf_ht"),  # wide but far from square
-    ((24, 16), "cpu", "geqr2_ht"),      # single panel
+# The full auto routing table in one place: (shape, backend, ndevices)
+# -> method.  ndevices=1 is the single-device column; the >1 columns
+# exercise the device-count-aware sharded_tiled routing.
+@pytest.mark.parametrize("shape,backend,ndevices,expected", [
+    ((1024, 32), "cpu", 1, "tsqr"),        # tall-skinny beats everything
+    ((1024, 256), "cpu", 1, "tsqr"),       # exactly 4:1 is still TSQR
+    ((512, 512), "cpu", 1, "tiled"),       # large near-square -> task graph
+    ((512, 512), "tpu", 1, "tiled"),
+    ((1023, 256), "cpu", 1, "tiled"),
+    ((300, 280), "cpu", 1, "tiled"),
+    ((2048, 1024), "cpu", 1, "tiled"),     # at the tiled ceiling
+    ((2049, 1024), "cpu", 1, "geqrf_ht"),  # past it: DAG would be too big
+    ((40000, 16384), "tpu", 1, "geqrf_ht"),
+    ((256, 128), "tpu", 1, "geqrf_ht"),    # min dim below the tiled floor
+    ((256, 128), "cpu", 1, "geqrf_ht"),
+    ((255, 255), "cpu", 1, "geqrf_ht"),    # one short of the floor
+    ((256, 40000), "cpu", 1, "geqrf_ht"),  # wide but far from square
+    ((24, 16), "cpu", 1, "geqr2_ht"),      # single panel
+    # -- device-count-aware rows: past the tiled ceiling, near-square --
+    ((512, 512), "cpu", 8, "tiled"),         # one device's budget: stay tiled
+    ((2049, 1024), "cpu", 8, "sharded_tiled"),  # too big for one device
+    ((4096, 4096), "cpu", 8, "sharded_tiled"),
+    ((4096, 2048), "cpu", 2, "sharded_tiled"),  # within 2x the ceiling
+    ((8192, 4096), "cpu", 2, "geqrf_ht"),    # past d * ceiling: blocked
+    ((2049, 1024), "cpu", 1, "geqrf_ht"),    # no second device, no sharding
+    ((1024, 2049), "cpu", 8, "geqrf_ht"),    # wide: row-sharding won't help
+    ((40000, 16384), "cpu", 8, "geqrf_ht"),  # past the 8-device ceiling too
 ])
-def test_auto_routing_table(shape, backend, expected):
+def test_auto_routing_table(shape, backend, ndevices, expected):
     assert select_method(shape, jnp.float32, QRConfig(),
-                         backend=backend) == expected
+                         backend=backend, ndevices=ndevices) == expected
+
+
+def test_auto_sharded_routing_respects_full_mode():
+    """Full Q is not a sharded capability -> auto must not route there."""
+    assert select_method((2049, 1024), jnp.float32, QRConfig(mode="full"),
+                         backend="cpu", ndevices=8) != "sharded_tiled"
+
+
+def test_auto_sharded_routing_respects_batched():
+    """Batched stacks are not a sharded capability either — auto must
+    keep them plannable (blocked path), not raise downstream."""
+    assert select_method((4, 2049, 1024), jnp.float32, QRConfig(),
+                         backend="cpu", ndevices=8) == "geqrf_ht"
+    solver = plan((4, 2049, 1024), jnp.float32, QRConfig(), ndevices=8)
+    assert solver.config.method == "geqrf_ht"
 
 
 def test_auto_picks_tiled_for_large_near_square():

@@ -24,9 +24,8 @@ from repro.core.tilegraph import (
 )
 
 
-def _rand(m, n, seed=0):
-    rng = np.random.default_rng(seed)
-    return jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+# Shared deterministic matrix factory (tests/conftest.py).
+from conftest import gaussian as _rand  # noqa: E402
 
 
 def _check(a, q, r, atol=1e-5):
