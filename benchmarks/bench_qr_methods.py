@@ -12,6 +12,14 @@ sharded_tiled records sweep the available domain counts (device count x
 shape): on a 1-device host that is the d=1 degenerate row; under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` the sweep records
 the scaling trajectory over d in {1, 2, 4, 8}.
+
+Engine rows: methods executing through the wavefront macro-op engine
+(``tiled`` / ``sharded_tiled``) are timed twice — engine-off
+(``use_kernel=False``, the vmapped jnp-oracle lowering) under the plain
+method label, and engine-on (``use_kernel=True``, one in-place Pallas
+dispatch per DAG level; interpret mode on CPU) as ``<method>+engine`` —
+so the refactor's win/parity is recorded in the same BENCH_qr.json.
+Records carry an ``engine`` boolean for trajectory queries.
 """
 
 import time
@@ -39,7 +47,10 @@ def _domain_counts():
     return out
 
 # Smoke mode also exercises the Pallas kernel paths in interpret mode.
-_SMOKE_KERNEL_METHODS = ("geqrf_ht", "tiled")
+_SMOKE_KERNEL_METHODS = ("geqrf_ht",)
+# Engine-backed methods get engine-on rows in every mode (win/parity
+# rows for the wavefront macro-op engine vs its jnp-oracle lowering).
+_ENGINE_METHODS = ("tiled", "sharded_tiled")
 
 
 def _qr_flops(m: int, n: int) -> float:
@@ -90,6 +101,19 @@ def sweep(smoke: bool = False) -> list:
                 if smoke and method in _SMOKE_KERNEL_METHODS:
                     cfgs.append((f"{method}+kernel", QRConfig(
                         method=method, mode="r", use_kernel=True, block=blk)))
+                if method in _ENGINE_METHODS:
+                    # pin the baseline to the jnp-oracle lowering (the
+                    # planner would resolve use_kernel=None -> True on
+                    # TPU), then add the engine-on twin of every row.
+                    # Off-TPU the engine runs interpret-mode Pallas, far
+                    # too slow for the full grid — twin only in smoke
+                    # (the CI record) or on real kernel hardware.
+                    cfgs = [(lbl, c.replace(use_kernel=False))
+                            for lbl, c in cfgs]
+                    if smoke or jax.default_backend() == "tpu":
+                        cfgs.extend((f"{lbl}+engine",
+                                     c.replace(use_kernel=True))
+                                    for lbl, c in list(cfgs))
                 for label, cfg in cfgs:
                     try:
                         solver = plan(a.shape, a.dtype, cfg)
@@ -100,6 +124,8 @@ def sweep(smoke: bool = False) -> list:
                         method=label, m=m, n=n, dtype=str(np.dtype(dtype)),
                         wall_us=dt * 1e6,
                         gflops=_qr_flops(m, n) / dt / 1e9,
+                        engine=bool(solver.config.use_kernel)
+                        and solver.config.method in ("tiled", "sharded_tiled"),
                     )
                     if method == "sharded_tiled":
                         rec.update(ndevices=jax.local_device_count(),

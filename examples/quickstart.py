@@ -43,7 +43,10 @@ def main():
 
     # 2b. the tiled task-graph backend: the factorization becomes a DAG
     #     of tile tasks (GEQRT/TSQRT/LARFB/SSRFB), levelized statically;
-    #     each wavefront runs its independent tiles as one vmap.  block
+    #     the wavefront macro-op engine (repro.core.engine) executes each
+    #     level — use_kernel=True lowers it to ONE in-place Pallas
+    #     dispatch over the tile workspace (interpret mode on CPU),
+    #     use_kernel=False runs the bitwise-identical jnp oracle.  block
     #     doubles as the tile size.
     from repro.core import wavefront_count
     from repro.core.dag import analyze_mht, analyze_tiled
@@ -55,6 +58,13 @@ def main():
           f"(vs {128} sequential columns unblocked)")
     beta_gain = analyze_tiled(128, 16).beta / analyze_mht(128).beta
     print(f"tiled ops/DAG-level vs MHT at n=128: {beta_gain:.0f}x")
+
+    # the engine knob: the Pallas path is bitwise-equal to the oracle
+    qe, re_ = qr(a, config=QRConfig(method="tiled", block=64,
+                                    use_kernel=True))
+    print(f"{'engine':10s} bitwise_vs_oracle="
+          f"{bool((qe == qt).all()) and bool((re_ == rt).all())} "
+          f"(one Pallas dispatch per DAG level, in-place workspace)")
 
     # 2c. the multi-device sharded tiled backend: the tile grid splits
     #     into per-device row-block domains (shard_map), each runs its

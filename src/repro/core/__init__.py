@@ -7,6 +7,9 @@ Layers:
     tsqr         communication-avoiding distributed QR over mesh axes
     tilegraph    tiled task-graph QR: GEQRT/TSQRT/LARFB/SSRFB tile DAG,
                  statically wavefront-scheduled (cross-panel parallelism)
+    engine       wavefront macro-op engine: executes each DAG level as
+                 one in-place Pallas dispatch over the tile workspace
+                 (or the bitwise-identical vmapped jnp oracle)
     distgraph    multi-device sharded tiled QR: per-device row-block
                  wavefront domains (shard_map) + TSQR-style R merge tree
     dag          beta/theta parallelism quantification (paper fig 9),

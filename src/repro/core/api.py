@@ -14,8 +14,10 @@ Every realization lives in the method registry (see
     "geqrf_ht"   blocked WY, MHT panels                  (LAPACK_DGEQRFHT)
     "geqrf_fori" blocked MHT, fori_loop panels           (optimizer path)
     "tsqr"       tall-skinny tree QR (single device)
-    "tiled"      tiled task-graph QR, wavefront-scheduled tile kernels
-                 (GEQRT/TSQRT/LARFB/SSRFB; block = tile size)
+    "tiled"      tiled task-graph QR via the wavefront macro-op engine
+                 (GEQRT/TSQRT/LARFB/SSRFB; block = tile size;
+                 use_kernel=True -> one in-place Pallas dispatch per DAG
+                 level, False -> the bitwise-identical jnp oracle)
     "sharded_tiled"  multi-device tiled QR: per-device row-block
                  wavefront domains via shard_map + TSQR-style R merge
                  tree (ndomains = device domains; testable on CPU with
@@ -29,15 +31,13 @@ Selection, batching (vmap over leading dims), and the Pallas kernel
 policy (``use_kernel=None`` => compiled on TPU when the panel fits VMEM,
 interpret-mode available on CPU) are all decided by
 ``plan(shape, dtype, config) -> QRSolver``; prefer holding a solver when
-factorizing many same-shaped matrices.
-
-Legacy string kwargs (``method=``/``block=``/``use_kernel=``) are kept as
-a deprecation shim and route through the same planner.
+factorizing many same-shaped matrices.  Configuration is by
+``config=QRConfig(...)`` only — the pre-planner string kwargs
+(``method=``/``block=``/...) were removed after their deprecation cycle.
 """
 
 from __future__ import annotations
 
-import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -47,68 +47,28 @@ from repro.core.plan import QRConfig, plan
 
 Array = jax.Array
 
-__all__ = ["qr", "orthogonalize", "lstsq", "qr_algorithm_eig", "METHODS",
+__all__ = ["qr", "orthogonalize", "lstsq", "qr_algorithm_eig",
            "QRConfig", "plan"]
 
-# Legacy constant (pre-registry); the registry is the source of truth now.
-METHODS = ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr")
-
-_LEGACY = dict(method="geqrf_ht", mode="reduced", block=32, use_kernel=False)
+_DEFAULT = QRConfig()
 
 
-def _shim_config(config: Optional[QRConfig], method, mode, block, use_kernel,
-                 nblocks=None, *, sign_fix: bool = False) -> QRConfig:
-    """Build a QRConfig from legacy string kwargs (deprecation shim).
-
-    ``config`` is the new-style path and excludes every legacy kwarg.
-    Without it, legacy defaults apply (``geqrf_ht``, block 32, no kernel)
-    so pre-registry callers see bit-identical behavior.
-    """
-    if config is not None:
-        if any(v is not None for v in (method, mode, block, use_kernel, nblocks)):
-            raise ValueError(
-                "pass either config=QRConfig(...) or legacy kwargs, not both")
-        return config.replace(sign_fix=sign_fix) if sign_fix else config
-    if any(v is not None for v in (method, block, use_kernel, nblocks)):
-        warnings.warn(
-            "string-dispatch qr kwargs (method=/block=/use_kernel=/nblocks=) "
-            "are deprecated; pass config=repro.core.QRConfig(...) instead",
-            DeprecationWarning, stacklevel=3)
-    return QRConfig(
-        method=_LEGACY["method"] if method is None else method,
-        mode=_LEGACY["mode"] if mode is None else mode,
-        block=_LEGACY["block"] if block is None else block,
-        use_kernel=_LEGACY["use_kernel"] if use_kernel is None else use_kernel,
-        nblocks=nblocks,
-        sign_fix=sign_fix,
-    )
-
-
-def qr(
-    a: Array,
-    *,
-    config: Optional[QRConfig] = None,
-    method: Optional[str] = None,
-    mode: Optional[str] = None,
-    block: Optional[int] = None,
-    use_kernel: Optional[bool] = None,
-    nblocks: Optional[int] = None,
-) -> Tuple[Array, Array] | Array:
+def qr(a: Array, *, config: Optional[QRConfig] = None
+       ) -> Tuple[Array, Array] | Array:
     """QR factorization with a registry-selected HT/MHT realization.
 
     ``config.mode``: "reduced" -> (Q thin m x k, R k x n); "r" -> R only;
     "full" -> (Q m x m, R m x n).  Inputs with leading batch dims
     (``a.ndim > 2``) are factorized batch-wise via the solver's vmap rule.
+    ``config=None`` plans with ``QRConfig()`` (method "auto").
     """
     if a.ndim < 2:
         raise ValueError(f"qr expects a matrix, got shape {a.shape}")
-    cfg = _shim_config(config, method, mode, block, use_kernel, nblocks)
+    cfg = _DEFAULT if config is None else config
     return plan(a.shape, a.dtype, cfg).solve(a)
 
 
-def orthogonalize(m_in: Array, *, config: Optional[QRConfig] = None,
-                  method: Optional[str] = None, block: Optional[int] = None,
-                  use_kernel: Optional[bool] = None) -> Array:
+def orthogonalize(m_in: Array, *, config: Optional[QRConfig] = None) -> Array:
     """Nearest-column-space orthonormal factor via QR with sign fixing.
 
     Returns Q * diag(sign(diag(R))) so the result is a deterministic,
@@ -118,33 +78,31 @@ def orthogonalize(m_in: Array, *, config: Optional[QRConfig] = None,
     through TSQR."""
     if m_in.ndim < 2:
         raise ValueError(f"orthogonalize expects a matrix, got shape {m_in.shape}")
-    cfg = _shim_config(config, method, None, block, use_kernel, sign_fix=True)
-    cfg = cfg.replace(mode="reduced")
+    cfg = (_DEFAULT if config is None else config).replace(
+        mode="reduced", sign_fix=True)
     transpose = m_in.shape[-2] < m_in.shape[-1]
     a = jnp.swapaxes(m_in, -1, -2) if transpose else m_in
     q = plan(a.shape, a.dtype, cfg).orthogonalize(a)
     return jnp.swapaxes(q, -1, -2) if transpose else q
 
 
-def lstsq(a: Array, b: Array, *, config: Optional[QRConfig] = None,
-          method: Optional[str] = None, block: Optional[int] = None) -> Array:
+def lstsq(a: Array, b: Array, *, config: Optional[QRConfig] = None) -> Array:
     """Least-squares solve ``min ||a x - b||`` via QR (m >= n).
 
     x = R^{-1} Q^T b — the numerically stable path the paper motivates for
     Kalman filtering (§1, Application 1).  With ``config=QRConfig()``
     tall-skinny systems route through TSQR."""
-    cfg = _shim_config(config, method, None, block, None)
-    cfg = cfg.replace(mode="reduced", sign_fix=False)
+    cfg = (_DEFAULT if config is None else config).replace(
+        mode="reduced", sign_fix=False)
     return plan(a.shape, a.dtype, cfg).lstsq(a, b)
 
 
 def qr_algorithm_eig(a: Array, *, iters: int = 200,
-                     config: Optional[QRConfig] = None,
-                     method: Optional[str] = None) -> Array:
+                     config: Optional[QRConfig] = None) -> Array:
     """Eigenvalues of symmetric ``a`` via the (unshifted) QR algorithm —
     paper §1 Application 2, Algorithm 1:  A_{k} = R_k Q_k."""
-    cfg = _shim_config(config, method, None, None, None)
-    cfg = cfg.replace(mode="reduced", sign_fix=False)
+    cfg = (_DEFAULT if config is None else config).replace(
+        mode="reduced", sign_fix=False)
     solver = plan(a.shape, a.dtype, cfg)
 
     def body(_, ak):

@@ -3,8 +3,9 @@
 The paper's thesis is that QR speed comes from exposing more parallel
 macro operations per DAG level (§4-§5).  :mod:`repro.core.tilegraph`
 realizes that on one device: the tile DAG is levelized statically and
-each wavefront runs its independent tiles as a ``vmap``.  This module is
-the next rung — the hierarchical / distributed tiled QR of Dongarra et
+executed by the wavefront macro-op engine (:mod:`repro.core.engine` —
+one in-place Pallas dispatch per level on the kernel path, the vmapped
+jnp oracle otherwise).  This module is the next rung — the hierarchical / distributed tiled QR of Dongarra et
 al. (arXiv:1110.1553) on top of the PLASMA tiled algorithm (Buttari et
 al., arXiv:0707.3548) — mapped onto a JAX device mesh:
 
@@ -15,7 +16,9 @@ al., arXiv:0707.3548) — mapped onto a JAX device mesh:
      exact-zero reflectors, so the unpadded slices are untouched).
   2. **Domain-local wavefronts**: inside ``shard_map`` each device runs
      the ordinary GEQRT/TSQRT/LARFB/SSRFB wavefront schedule on its own
-     (p/d x q) sub-grid — zero cross-device traffic during the sweep.
+     (p/d x q) sub-grid through the same :func:`repro.core.engine.
+     factor_tiles` loop as the single-device backend — zero cross-device
+     traffic during the sweep, one execution path for both backends.
   3. **Hierarchical R merge**: the per-domain R factors reduce through
      the TSQR butterfly tree (:func:`repro.core.tsqr.butterfly_merge_r`),
      exchanging one n x n triangle per link per round; after
@@ -235,11 +238,11 @@ register_method(MethodSpec(
     supports_full_q=False,
     batched=False,  # shard_map under vmap is not part of the contract
     kernel_backed=True,
-    # Per-device working set is one domain's tile pair — the tile
-    # kernels are unchanged (sharding divides the grid, not the tiles),
-    # so the tiled estimator is the sharded estimator.
+    # Per-device working set is one domain's engine dispatch — sharding
+    # divides the grid, not the tiles, so the tiled (macro-op engine)
+    # estimator is the sharded estimator.
     vmem_bytes=_vmem_tiled,
-    kernel_policy="tile_ops",
+    kernel_policy="macro_ops",
     description="multi-device tiled QR: per-device row-block wavefront "
                 "domains (shard_map) + TSQR-style hierarchical R merge",
 ))

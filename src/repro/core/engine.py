@@ -1,0 +1,373 @@
+"""Wavefront macro-op execution engine — each DAG level is one in-place
+Pallas dispatch over a tile workspace.
+
+:mod:`repro.core.tilegraph` levelizes the tiled-QR task DAG statically;
+this module *executes* that schedule.  It is the software analogue of the
+paper's Reconfigurable Data-path orchestration (§5): every DAG node runs
+as a fused macro operation (:mod:`repro.kernels.macro_ops`), and every
+wavefront's same-kind task batch lowers to a **single** ``pallas_call``
+whose grid enumerates the level's independent tiles.
+
+Execution model (``use_kernel=True``):
+
+  * the factorization state lives in a ``(p, q, nb, nb)`` tile
+    **workspace** plus four small reflector-state arrays (``d_t`` /
+    ``d_taus`` for GEQRT, ``t_t`` / ``t_taus`` for TSQRT);
+  * task coordinates are **scalar-prefetch** index arrays; block
+    index-maps and in-kernel DMA read/write tiles *directly* from the
+    workspace (held in ``ANY`` memory space), so the gather ->
+    vmap-compute -> ``.at[].set`` scatter round trips of the old
+    scheduler never happen;
+  * every ``pallas_call`` aliases the workspace (and the state arrays it
+    writes) input -> output, so the whole factor loop is in place — no
+    fresh tile array materializes per wavefront;
+  * :func:`factor_tiles` additionally **donates** the workspace
+    (``jax.jit(..., donate_argnums=(0,))``), so callers outside a jit
+    don't retain a second copy of the input buffer either.
+
+``use_kernel=False`` is the pure-jnp oracle lowering: the *same*
+value-level macro-op bodies, vmapped over each batch with functional
+updates.  Both lowerings trace identical op sequences per task, so the
+engine path is **bitwise** equal to the oracle (asserted in
+tests/test_engine.py and tests/test_conformance.py).  Interpret-mode
+Pallas (the CPU default) is preserved via the ``interpret`` knob /
+``macro_ops.default_interpret``.
+
+Both the single-device ``tiled`` backend and the per-domain local sweeps
+of the multi-device ``sharded_tiled`` backend execute through this
+engine; the planner's ``"macro_ops"`` kernel policy carries its VMEM
+accounting.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import macro_ops
+
+Array = jax.Array
+
+__all__ = [
+    "FactorState",
+    "factor_tiles",
+    "wavefront_task_arrays",
+]
+
+_KIND_ORDER = ("GEQRT", "LARFB", "TSQRT", "SSRFB")
+
+
+class FactorState(NamedTuple):
+    """Factored tile state: packed reflectors + per-task block reflectors.
+
+    tiles:  (p, q, nb, nb) — diagonal tiles hold V1 strictly below / R on
+            and above the diagonal; tiles (i, k), i > k hold the TSQRT V2;
+            tiles (k, j), j > k hold R blocks.
+    d_t:    (r, nb, nb) GEQRT block reflectors T;  d_taus: (r, nb)
+    t_t:    (p, r, nb, nb) TSQRT block reflectors; t_taus: (p, r, nb)
+    """
+
+    tiles: Array
+    d_t: Array
+    d_taus: Array
+    t_t: Array
+    t_taus: Array
+
+
+@functools.lru_cache(maxsize=None)
+def wavefront_task_arrays(p: int, q: int
+                          ) -> Tuple[Dict[str, np.ndarray], ...]:
+    """The static schedule as dispatchable batches: one dict per
+    wavefront mapping kind -> int32 ``(ntasks, 3)`` array of (k, i, j)."""
+    from repro.core.tilegraph import wavefronts  # lazy: tilegraph imports us
+
+    out: List[Dict[str, np.ndarray]] = []
+    for wf in wavefronts(p, q):
+        by_kind: Dict[str, List] = {}
+        for t in wf:
+            by_kind.setdefault(t.kind, []).append(t)
+        out.append({kind: np.array([[t.k, t.i, t.j] for t in tasks],
+                                   dtype=np.int32)
+                    for kind, tasks in by_kind.items()})
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# jnp lowering — the bitwise oracle (vmap of the same macro-op bodies)
+# ---------------------------------------------------------------------------
+
+def _batched(body, *args):
+    """vmap the macro-op body over a task batch — except singleton
+    batches, which run unbatched: XLA lowers a batch-1 ``dot_general``
+    through a different (reshaped) contraction than the plain dot the
+    Pallas body traces, breaking bitwise parity between the lowerings.
+    For every batch size > 1 the per-slice results ARE bitwise equal to
+    the unbatched body (stress-checked in tests/test_engine.py)."""
+    if args[0].shape[0] == 1:
+        out = body(*(x[0] for x in args))
+        if isinstance(out, tuple):
+            return tuple(o[None] for o in out)
+        return out[None]
+    return jax.vmap(body)(*args)
+
+
+def _jnp_wavefront(state: FactorState, by_kind: Dict[str, np.ndarray]
+                   ) -> FactorState:
+    tiles, d_t, d_taus, t_t, t_taus = state
+    # Gathers read the pre-wavefront tiles; same-level tasks touch
+    # disjoint tile regions (TSQRT merges into the upper triangle only,
+    # preserving the GEQRT V1 below the diagonal), so deferring all
+    # scatters to the end of the level is value-identical to the
+    # engine's in-place execution.
+    updates = []
+    if "GEQRT" in by_kind:
+        kk = by_kind["GEQRT"][:, 0]
+        packed, t, taus = _batched(macro_ops.geqrt_body, tiles[kk, kk])
+        d_t = d_t.at[kk].set(t)
+        d_taus = d_taus.at[kk].set(taus)
+        updates.append((kk, kk, packed))
+    if "LARFB" in by_kind:
+        kk = by_kind["LARFB"][:, 0]
+        jj = by_kind["LARFB"][:, 2]
+        out = _batched(macro_ops.larfb_body, tiles[kk, kk], d_t[kk],
+                       tiles[kk, jj])
+        updates.append((kk, jj, out))
+    if "TSQRT" in by_kind:
+        kk = by_kind["TSQRT"][:, 0]
+        ii = by_kind["TSQRT"][:, 1]
+        merged, v2, t, taus = _batched(
+            macro_ops.tsqrt_body, tiles[kk, kk], tiles[ii, kk])
+        t_t = t_t.at[ii, kk].set(t)
+        t_taus = t_taus.at[ii, kk].set(taus)
+        updates.append((kk, kk, merged))
+        updates.append((ii, kk, v2))
+    if "SSRFB" in by_kind:
+        kk = by_kind["SSRFB"][:, 0]
+        ii = by_kind["SSRFB"][:, 1]
+        jj = by_kind["SSRFB"][:, 2]
+        ck, ci = _batched(
+            macro_ops.ssrfb_body,
+            tiles[ii, kk], t_t[ii, kk], tiles[kk, jj], tiles[ii, jj])
+        updates.append((kk, jj, ck))
+        updates.append((ii, jj, ci))
+    for ri, ci_, vals in updates:
+        tiles = tiles.at[ri, ci_].set(vals)
+    return FactorState(tiles, d_t, d_taus, t_t, t_taus)
+
+
+# ---------------------------------------------------------------------------
+# Pallas lowering — one in-place pallas_call per (wavefront, kind) batch
+# ---------------------------------------------------------------------------
+
+def _any_spec():
+    return pl.BlockSpec(memory_space=pltpu.ANY)
+
+
+def _dispatch_geqrt(state: FactorState, idx: np.ndarray, nb: int,
+                    interpret: bool) -> FactorState:
+    tiles, d_t, d_taus, t_t, t_taus = state
+    kk = jnp.asarray(idx[:, 0])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(idx.shape[0],),
+        in_specs=[
+            _any_spec(),
+            pl.BlockSpec((1, nb, nb), lambda g, kk: (kk[g], 0, 0)),
+            pl.BlockSpec((1, nb), lambda g, kk: (kk[g], 0)),
+        ],
+        out_specs=[
+            _any_spec(),
+            pl.BlockSpec((1, nb, nb), lambda g, kk: (kk[g], 0, 0)),
+            pl.BlockSpec((1, nb), lambda g, kk: (kk[g], 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((nb, nb), tiles.dtype),
+                        pltpu.SemaphoreType.DMA],
+    )
+    tiles, d_t, d_taus = pl.pallas_call(
+        macro_ops.geqrt_wavefront_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(tiles.shape, tiles.dtype),
+                   jax.ShapeDtypeStruct(d_t.shape, d_t.dtype),
+                   jax.ShapeDtypeStruct(d_taus.shape, d_taus.dtype)],
+        input_output_aliases={1: 0, 2: 1, 3: 2},
+        interpret=interpret,
+    )(kk, tiles, d_t, d_taus)
+    return FactorState(tiles, d_t, d_taus, t_t, t_taus)
+
+
+def _dispatch_larfb(state: FactorState, idx: np.ndarray, nb: int,
+                    interpret: bool) -> FactorState:
+    tiles, d_t, d_taus, t_t, t_taus = state
+    kk = jnp.asarray(idx[:, 0])
+    jj = jnp.asarray(idx[:, 2])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(idx.shape[0],),
+        in_specs=[
+            _any_spec(),
+            pl.BlockSpec((1, nb, nb), lambda g, kk, jj: (kk[g], 0, 0)),
+        ],
+        out_specs=[_any_spec()],
+        scratch_shapes=[pltpu.VMEM((nb, nb), tiles.dtype),
+                        pltpu.VMEM((nb, nb), tiles.dtype),
+                        pltpu.SemaphoreType.DMA],
+    )
+    (tiles,) = pl.pallas_call(
+        macro_ops.larfb_wavefront_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(tiles.shape, tiles.dtype)],
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(kk, jj, tiles, d_t)
+    return FactorState(tiles, d_t, d_taus, t_t, t_taus)
+
+
+def _dispatch_tsqrt(state: FactorState, idx: np.ndarray, nb: int,
+                    interpret: bool) -> FactorState:
+    tiles, d_t, d_taus, t_t, t_taus = state
+    kk = jnp.asarray(idx[:, 0])
+    ii = jnp.asarray(idx[:, 1])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(idx.shape[0],),
+        in_specs=[
+            _any_spec(),
+            pl.BlockSpec((1, 1, nb, nb),
+                         lambda g, kk, ii: (ii[g], kk[g], 0, 0)),
+            pl.BlockSpec((1, 1, nb), lambda g, kk, ii: (ii[g], kk[g], 0)),
+        ],
+        out_specs=[
+            _any_spec(),
+            pl.BlockSpec((1, 1, nb, nb),
+                         lambda g, kk, ii: (ii[g], kk[g], 0, 0)),
+            pl.BlockSpec((1, 1, nb), lambda g, kk, ii: (ii[g], kk[g], 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((nb, nb), tiles.dtype),
+                        pltpu.VMEM((nb, nb), tiles.dtype),
+                        pltpu.SemaphoreType.DMA],
+    )
+    tiles, t_t, t_taus = pl.pallas_call(
+        macro_ops.tsqrt_wavefront_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(tiles.shape, tiles.dtype),
+                   jax.ShapeDtypeStruct(t_t.shape, t_t.dtype),
+                   jax.ShapeDtypeStruct(t_taus.shape, t_taus.dtype)],
+        input_output_aliases={2: 0, 3: 1, 4: 2},
+        interpret=interpret,
+    )(kk, ii, tiles, t_t, t_taus)
+    return FactorState(tiles, d_t, d_taus, t_t, t_taus)
+
+
+def _dispatch_ssrfb(state: FactorState, idx: np.ndarray, nb: int,
+                    interpret: bool) -> FactorState:
+    tiles, d_t, d_taus, t_t, t_taus = state
+    kk = jnp.asarray(idx[:, 0])
+    ii = jnp.asarray(idx[:, 1])
+    jj = jnp.asarray(idx[:, 2])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(idx.shape[0],),
+        in_specs=[
+            _any_spec(),
+            pl.BlockSpec((1, 1, nb, nb),
+                         lambda g, kk, ii, jj: (ii[g], kk[g], 0, 0)),
+        ],
+        out_specs=[_any_spec()],
+        scratch_shapes=[pltpu.VMEM((nb, nb), tiles.dtype),
+                        pltpu.VMEM((nb, nb), tiles.dtype),
+                        pltpu.VMEM((nb, nb), tiles.dtype),
+                        pltpu.SemaphoreType.DMA],
+    )
+    (tiles,) = pl.pallas_call(
+        macro_ops.ssrfb_wavefront_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(tiles.shape, tiles.dtype)],
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(kk, ii, jj, tiles, t_t)
+    return FactorState(tiles, d_t, d_taus, t_t, t_taus)
+
+
+_DISPATCH = {
+    "GEQRT": _dispatch_geqrt,
+    "LARFB": _dispatch_larfb,
+    "TSQRT": _dispatch_tsqrt,
+    "SSRFB": _dispatch_ssrfb,
+}
+
+
+def _pallas_wavefront(state: FactorState, by_kind: Dict[str, np.ndarray],
+                      nb: int, interpret: bool) -> FactorState:
+    # Kind order is part of the in-place contract: within a level the
+    # only tile shared between kinds is the diagonal, and its two users
+    # touch disjoint regions (TSQRT writes the upper triangle, LARFB
+    # reads the strictly-lower V1), so any order is value-identical —
+    # the canonical order just keeps dispatch deterministic.
+    for kind in _KIND_ORDER:
+        if kind in by_kind:
+            state = _DISPATCH[kind](state, by_kind[kind], nb, interpret)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# the factor loop
+# ---------------------------------------------------------------------------
+
+def _factor_impl(tiles: Array, p: int, q: int, nb: int, use_kernel: bool,
+                 interpret: bool) -> FactorState:
+    r = min(p, q)
+    dt = tiles.dtype
+    state = FactorState(
+        tiles,
+        jnp.zeros((r, nb, nb), dt),
+        jnp.zeros((r, nb), dt),
+        jnp.zeros((p, r, nb, nb), dt),
+        jnp.zeros((p, r, nb), dt),
+    )
+    step = (functools.partial(_pallas_wavefront, nb=nb, interpret=interpret)
+            if use_kernel else _jnp_wavefront)
+    for by_kind in wavefront_task_arrays(p, q):
+        state = step(state, by_kind)
+    return state
+
+
+_factor_jit = jax.jit(_factor_impl, static_argnums=(1, 2, 3, 4, 5),
+                      donate_argnums=(0,))
+
+
+def factor_tiles(tiles: Array, *, p: int, q: int, nb: int,
+                 use_kernel: bool = False,
+                 interpret: Optional[bool] = None) -> FactorState:
+    """Run the full wavefront schedule over a ``(p, q, nb, nb)`` workspace.
+
+    The workspace argument is **donated** — the engine factors in place
+    and the caller's buffer is consumed (pass ``tiles.copy()`` to keep
+    it).  ``use_kernel=True`` dispatches each (wavefront, kind) batch as
+    one Pallas macro-op call (``interpret=None`` resolves via the
+    ``macro_ops`` kernel policy: compiled on TPU, interpret elsewhere);
+    ``use_kernel=False`` runs the bitwise-identical jnp oracle lowering.
+    """
+    if tiles.ndim != 4 or tiles.shape[:2] != (p, q) \
+            or tiles.shape[2:] != (nb, nb):
+        raise ValueError(
+            f"expected a ({p}, {q}, {nb}, {nb}) tile workspace, "
+            f"got {tiles.shape}")
+    if use_kernel:
+        from repro.core.plan import kernel_vmem_budget
+
+        itemsize = jnp.dtype(tiles.dtype).itemsize
+        need = macro_ops.engine_vmem_bytes(nb, itemsize)
+        budget = kernel_vmem_budget("macro_ops")
+        if need > budget:
+            raise ValueError(
+                f"tile ({nb},{nb}) exceeds VMEM budget "
+                f"({need} > {budget}); shrink the tile")
+    if interpret is None:
+        interpret = macro_ops.default_interpret()
+    return _factor_jit(tiles, p, q, nb, bool(use_kernel), bool(interpret))

@@ -30,14 +30,19 @@ Tiled QR task graph
 -------------------
 ``method="tiled"`` (:mod:`repro.core.tilegraph`) decomposes the
 factorization into a DAG of tile tasks (GEQRT / TSQRT / LARFB / SSRFB)
-over an nb x nb tile grid, levelizes it statically, and lowers each
-wavefront to a ``vmap`` over that level's independent tiles — cross-panel
-parallelism the blocked methods serialize away.  ``QRConfig.block``
-doubles as the tile size; the ``method="auto"`` heuristic routes large
-near-square matrices (dims in [256, 2048], aspect < 4 — the upper bound
-keeps the symbolic DAG small at the default tile) there.  On the kernel
-path the TSQRT/SSRFB macro ops run as the Pallas kernels in
-:mod:`repro.kernels.tile_ops`.
+over an nb x nb tile grid, levelizes it statically, and executes the
+schedule through the wavefront macro-op engine
+(:mod:`repro.core.engine`): with ``use_kernel=True`` each level's
+same-kind task batch is a **single in-place Pallas dispatch** over a
+``(p, q, nb, nb)`` tile workspace (macro-op bodies from the unified
+:mod:`repro.kernels.macro_ops` library; interpret mode off-TPU), and
+with ``use_kernel=False`` the bitwise-identical vmapped jnp oracle of
+the same bodies — cross-panel parallelism the blocked methods serialize
+away either way.  ``QRConfig.block`` doubles as the tile size; the
+``method="auto"`` heuristic routes large near-square matrices (dims in
+[256, 2048], aspect < 4 — the upper bound keeps the symbolic DAG small
+at the default tile) there.  The engine's VMEM accounting is the
+``"macro_ops"`` kernel policy.
 
 Sharded tiled QR (multi-device)
 -------------------------------

@@ -22,28 +22,31 @@ structure that :mod:`repro.core.dag` quantifies for HT vs MHT
 this DAG).
 
 Execution model: the DAG is levelized *statically* (every task's
-wavefront = 1 + max over its dependencies), and each wavefront lowers to
-JAX as a ``vmap`` over the independent same-kind tiles of that level.
-Shapes are static per wavefront, so the whole factorization traces into
-one jittable program — no runtime scheduler, the schedule IS the program.
+wavefront = 1 + max over its dependencies) and handed to the wavefront
+macro-op engine (:mod:`repro.core.engine`), which lowers each level's
+same-kind task batch to a **single in-place Pallas dispatch** over a
+``(p, q, nb, nb)`` tile workspace (``use_kernel=True``) or to the
+bitwise-identical vmapped jnp oracle (``use_kernel=False``).  Shapes are
+static per wavefront, so the whole factorization traces into one
+jittable program — no runtime scheduler, the schedule IS the program.
 
-Tile kernels: GEQRT/LARFB reuse the existing Pallas kernels
-(:func:`repro.kernels.ops.mht_panel` / ``wy_trailing``); the two new
-macro ops TSQRT/SSRFB live in :mod:`repro.kernels.tile_ops` with
-``interpret=True`` CPU fallback.  ``use_kernel=False`` runs the pure-jnp
-realizations below (also the kernels' oracles).
+Tile kernels: all four macro ops (GEQRT / LARFB / TSQRT / SSRFB) live in
+the unified :mod:`repro.kernels.macro_ops` library — one Householder /
+WY core shared with the panel and trailing kernels — with
+``interpret=True`` CPU fallback.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, NamedTuple, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocked import larft, panel_factor, unpack_v_panel
+from repro.core import engine
+from repro.core.blocked import unpack_v_panel
 
 Array = jax.Array
 
@@ -241,88 +244,12 @@ def sharded_wavefront_count(p: int, q: int, d: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# tile macro-op realizations (jnp path; kernels in repro.kernels.tile_ops)
+# wavefront execution (repro.core.engine + repro.kernels.macro_ops)
 # ---------------------------------------------------------------------------
 
-def _geqrt(tile: Array, use_kernel: bool) -> Tuple[Array, Array]:
-    """QR of one diagonal tile -> (packed V1\\R, taus)."""
-    if use_kernel:
-        from repro.kernels import ops  # lazy: kernels.ref imports core
-
-        return ops.mht_panel(tile, row0=0)
-    return panel_factor(tile, 0)
-
-
-def _larfb(v1: Array, t: Array, c: Array, use_kernel: bool) -> Array:
-    """Apply Q_k^T to one tile: C - V1 (T^T (V1^T C))."""
-    if use_kernel:
-        from repro.kernels import ops
-
-        return ops.wy_trailing(v1, t, c)
-    w = t.T @ (v1.T @ c)
-    return c - v1 @ w
-
-
-def _tsqrt(r_t: Array, a_t: Array, use_kernel: bool
-           ) -> Tuple[Array, Array, Array]:
-    """Stacked-triangle QR of [R_kk; A_ik] -> (R new, V2, taus).
-
-    The top block is upper triangular, so each column's reflector is
-    ``[e_j; v2_j]``: the strict-lower top entries are exactly zero and the
-    new R comes back with zeros below its diagonal (the jnp path realizes
-    this through :func:`panel_factor` on the stacked pair; the Pallas
-    kernel in :mod:`repro.kernels.tile_ops` exploits the structure
-    directly).
-    """
-    if use_kernel:
-        from repro.kernels import tile_ops
-
-        return tile_ops.tsqrt(r_t, a_t)
-    nb = r_t.shape[0]
-    packed, taus = panel_factor(jnp.concatenate([r_t, a_t], axis=0), 0)
-    return packed[:nb], packed[nb:], taus
-
-
-def _ssrfb(v2: Array, t: Array, ck: Array, ci: Array, use_kernel: bool
-           ) -> Tuple[Array, Array]:
-    """Apply TSQRT reflectors to the tile pair [C_k; C_i] (transposed Q).
-
-    With V = [I; V2]:  W = T^T (C_k + V2^T C_i);  C_k -= W;  C_i -= V2 W.
-    """
-    if use_kernel:
-        from repro.kernels import tile_ops
-
-        return tile_ops.ssrfb(v2, t, ck, ci)
-    w = t.T @ (ck + v2.T @ ci)
-    return ck - w, ci - v2 @ w
-
-
-def _larft_stacked(v2: Array, taus: Array) -> Array:
-    """Block-reflector T for the stacked TSQRT reflectors V = [I; V2]."""
-    nb = v2.shape[1]
-    return larft(jnp.concatenate([jnp.eye(nb, dtype=v2.dtype), v2], axis=0),
-                 taus)
-
-
-# ---------------------------------------------------------------------------
-# wavefront executor
-# ---------------------------------------------------------------------------
-
-class TiledFactors(NamedTuple):
-    """Factored tile state: packed reflectors + per-task block reflectors.
-
-    tiles:  (p, q, nb, nb) — diagonal tiles hold V1 strictly below / R on
-            and above the diagonal; tiles (i, k), i > k hold the TSQRT V2;
-            tiles (k, j), j > k hold R blocks.
-    d_t:    (r, nb, nb) GEQRT block reflectors T;  d_taus: (r, nb)
-    t_t:    (p, r, nb, nb) TSQRT block reflectors; t_taus: (p, r, nb)
-    """
-
-    tiles: Array
-    d_t: Array
-    d_taus: Array
-    t_t: Array
-    t_taus: Array
+# The factored tile state is the engine's — re-exported under the
+# historical name (same fields, same layout).
+TiledFactors = engine.FactorState
 
 
 def _split_tiles(a: Array, p: int, q: int, nb: int) -> Array:
@@ -332,77 +259,6 @@ def _split_tiles(a: Array, p: int, q: int, nb: int) -> Array:
 def _join_tiles(tiles: Array) -> Array:
     p, q, nb, _ = tiles.shape
     return tiles.transpose(0, 2, 1, 3).reshape(p * nb, q * nb)
-
-
-def _upper_mask(nb: int) -> Array:
-    rows = jnp.arange(nb)[:, None]
-    return rows <= jnp.arange(nb)[None, :]
-
-
-def _factor_wavefronts(tiles: Array, p: int, q: int, nb: int,
-                       use_kernel: bool) -> TiledFactors:
-    """Run the static schedule: one vmap per (wavefront, task kind)."""
-    r = min(p, q)
-    dt = tiles.dtype
-    d_t = jnp.zeros((r, nb, nb), dt)
-    d_taus = jnp.zeros((r, nb), dt)
-    t_t = jnp.zeros((p, r, nb, nb), dt)
-    t_taus = jnp.zeros((p, r, nb), dt)
-    upper = _upper_mask(nb)
-
-    for wf in wavefronts(p, q):
-        by_kind: Dict[str, List[TileTask]] = {}
-        for t in wf:
-            by_kind.setdefault(t.kind, []).append(t)
-
-        # All gathers below read the pre-wavefront `tiles`; true data
-        # dependencies always span wavefronts, and same-level tasks write
-        # disjoint tile regions (TSQRT merges into the upper triangle
-        # only, preserving the GEQRT V1 below the diagonal).
-        updates = []
-        if "GEQRT" in by_kind:
-            kk = jnp.array([t.k for t in by_kind["GEQRT"]])
-            packed, taus = jax.vmap(
-                lambda x: _geqrt(x, use_kernel))(tiles[kk, kk])
-            v1 = jax.vmap(lambda pk: unpack_v_panel(pk, 0))(packed)
-            d_t = d_t.at[kk].set(jax.vmap(larft)(v1, taus))
-            d_taus = d_taus.at[kk].set(taus)
-            updates.append((kk, kk, packed))
-        if "LARFB" in by_kind:
-            kk = jnp.array([t.k for t in by_kind["LARFB"]])
-            jj = jnp.array([t.j for t in by_kind["LARFB"]])
-            v1 = jax.vmap(lambda pk: unpack_v_panel(pk, 0))(tiles[kk, kk])
-            out = jax.vmap(lambda v, t, c: _larfb(v, t, c, use_kernel))(
-                v1, d_t[kk], tiles[kk, jj])
-            updates.append((kk, jj, out))
-        if "TSQRT" in by_kind:
-            kk = jnp.array([t.k for t in by_kind["TSQRT"]])
-            ii = jnp.array([t.i for t in by_kind["TSQRT"]])
-            diag = tiles[kk, kk]
-            # The diagonal tile packs V1 below its diagonal — TSQRT
-            # factors the R triangle only.
-            r_in = jnp.where(upper[None], diag, 0.0)
-            r_new, v2, taus = jax.vmap(
-                lambda rt, at: _tsqrt(rt, at, use_kernel))(r_in, tiles[ii, kk])
-            t_t = t_t.at[ii, kk].set(jax.vmap(_larft_stacked)(v2, taus))
-            t_taus = t_taus.at[ii, kk].set(taus)
-            # Merge: new R in the upper triangle, keep V1 below it.
-            merged = jnp.where(upper[None], r_new, diag)
-            updates.append((kk, kk, merged))
-            updates.append((ii, kk, v2))
-        if "SSRFB" in by_kind:
-            kk = jnp.array([t.k for t in by_kind["SSRFB"]])
-            ii = jnp.array([t.i for t in by_kind["SSRFB"]])
-            jj = jnp.array([t.j for t in by_kind["SSRFB"]])
-            ck, ci = jax.vmap(
-                lambda v, t, a, b: _ssrfb(v, t, a, b, use_kernel))(
-                    tiles[ii, kk], t_t[ii, kk], tiles[kk, jj], tiles[ii, jj])
-            updates.append((kk, jj, ck))
-            updates.append((ii, jj, ci))
-        for ri, ci_, vals in updates:
-            tiles = tiles.at[ri, ci_].set(vals)
-
-    return TiledFactors(tiles, d_t, d_taus, t_t, t_taus)
 
 
 def _form_q_tiled(f: TiledFactors, ncols: int) -> Array:
@@ -435,6 +291,11 @@ def tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
              use_kernel: bool = False):
     """QR of ``a`` via the tiled task-graph runtime.
 
+    ``use_kernel=True`` executes each wavefront through the macro-op
+    engine's in-place Pallas dispatch (:func:`repro.core.engine.
+    factor_tiles`; interpret mode off-TPU); ``use_kernel=False`` runs the
+    bitwise-identical pure-jnp oracle lowering of the same schedule.
+
     Non-multiple-of-tile shapes are zero-padded: padded rows/columns
     yield exactly-zero reflector entries (degenerate ``tau = 0`` columns),
     so the unpadded Q/R slices are the factorization of ``a`` itself.
@@ -452,7 +313,8 @@ def tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
     pad = ((0, p * nb - m), (0, q * nb - n))
     a_pad = jnp.pad(a, pad) if (pad[0][1] or pad[1][1]) else a
 
-    f = _factor_wavefronts(_split_tiles(a_pad, p, q, nb), p, q, nb, use_kernel)
+    f = engine.factor_tiles(_split_tiles(a_pad, p, q, nb),
+                            p=p, q=q, nb=nb, use_kernel=use_kernel)
     k = min(m, n)
     r_full = jnp.triu(_join_tiles(f.tiles))
     if mode == "r":
@@ -494,11 +356,10 @@ def _solve_tiled(a: Array, cfg: QRConfig):
 
 
 def _vmem_tiled(m: int, n: int, cfg: QRConfig) -> int:
-    """Largest per-task working set on the kernel path (one tile pair)."""
-    from repro.kernels import tile_ops
+    """Largest per-task working set on the engine's kernel path."""
+    from repro.kernels import macro_ops
 
-    nb = min(cfg.block, m, n)
-    return max(tile_ops.vmem_bytes_tsqrt(nb), tile_ops.vmem_bytes_ssrfb(nb))
+    return macro_ops.engine_vmem_bytes(min(cfg.block, m, n))
 
 
 register_method(MethodSpec(
@@ -507,7 +368,7 @@ register_method(MethodSpec(
     resolve=_resolve_tiled,
     kernel_backed=True,
     vmem_bytes=_vmem_tiled,
-    kernel_policy="tile_ops",
-    description="tiled task-graph QR, wavefront-scheduled tile kernels "
-                "(GEQRT/TSQRT/LARFB/SSRFB)",
+    kernel_policy="macro_ops",
+    description="tiled task-graph QR via the wavefront macro-op engine "
+                "(GEQRT/TSQRT/LARFB/SSRFB, one Pallas dispatch per level)",
 ))

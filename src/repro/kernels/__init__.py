@@ -1,12 +1,17 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
+    macro_ops    THE unified macro-op library: one Householder/WY core,
+                 the four tile-DAG bodies (GEQRT/LARFB/TSQRT/SSRFB), the
+                 wavefront-engine kernels, and the VMEM estimators
     mht_panel    fused VMEM-resident MHT panel factorization (DOT4 analogue)
     wy_trailing  fused WY trailing update  C - V (T^T (V^T C))
-    tile_ops     tiled-QR macro ops: TSQRT (stacked-triangle QR) and
-                 SSRFB (tile-pair block-reflector apply)
+    tile_ops     standalone single-tile TSQRT / SSRFB wrappers
 
 ``ops``/``tile_ops`` hold the jit'd public wrappers (interpret-mode on
-CPU), ``ref`` the pure-jnp oracles the tests pin against.
+CPU), ``ref`` the pure-jnp oracles the tests pin against; every kernel
+body is a shell over a ``macro_ops`` value-level function, so the engine
+path (:mod:`repro.core.engine`) and the jnp oracle path trace identical
+op sequences.
 """
 
-from repro.kernels import ops, ref, tile_ops  # noqa: F401
+from repro.kernels import macro_ops, ops, ref, tile_ops  # noqa: F401

@@ -14,6 +14,11 @@ rank-1 fused-multiply-subtract happen register/VMEM-resident — one HBM
 read and one HBM write for the entire panel factorization, versus
 2·b HBM passes for a column-by-column classical HT.
 
+The column loop itself is :func:`repro.kernels.macro_ops.panel_body` —
+the ONE Householder inner loop this package owns, shared with the
+tile-DAG GEQRT/TSQRT macro ops and the wavefront engine.  This module
+only binds it to a single-grid-cell ``pallas_call``.
+
 VMEM budget: (m, b) fp32 once ≈ m·b·4 bytes; the ops wrapper enforces
 m·b·4 ≤ 8 MiB (half of v5e VMEM, leaving room for double buffering).
 Taller panels are handled above this kernel by TSQR leaves.
@@ -21,7 +26,8 @@ Taller panels are handled above this kernel by TSQR leaves.
 Layout notes for the MXU/VPU era (vs. the paper's 4-wide RDP):
   * all tensors kept 2-D; reductions are cross-lane VPU ops;
   * row/column masks from ``broadcasted_iota`` (TPU requires 2-D iota);
-  * fp32 accumulation irrespective of the I/O dtype.
+  * accumulation in ``promote_types(dtype, float32)`` irrespective of
+    the I/O dtype.
 """
 
 from __future__ import annotations
@@ -30,9 +36,9 @@ import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
+
+from repro.kernels import macro_ops
 
 Array = jax.Array
 
@@ -46,46 +52,9 @@ def mht_panel_kernel(panel_ref, out_ref, taus_ref, *, row0: int):
     out_ref:   (m, b) packed factor (R upper / V below pivots)
     taus_ref:  (1, b) tau row
     """
-    m, b = panel_ref.shape
-    a0 = panel_ref[...].astype(jnp.float32)
-    rows = lax.broadcasted_iota(jnp.int32, (m, 1), 0)
-    cols = lax.broadcasted_iota(jnp.int32, (1, b), 1)
-    taus0 = jnp.zeros((1, b), jnp.float32)
-
-    def body(lj, carry):
-        a, taus = carry
-        pivot = row0 + lj
-        colmask = cols == lj                                   # (1, b)
-        at = rows == pivot                                     # (m, 1)
-        below = rows > pivot
-
-        x = jnp.sum(jnp.where(colmask, a, 0.0), axis=1, keepdims=True)  # (m,1)
-        x0 = jnp.sum(jnp.where(at, x, 0.0), axis=0, keepdims=True)      # (1,1)
-        tail2 = jnp.sum(jnp.where(below, x * x, 0.0), axis=0, keepdims=True)
-        norm = jnp.sqrt(x0 * x0 + tail2)
-        beta = jnp.where(x0 >= 0.0, -norm, norm)               # (1,1)
-        degen = tail2 == 0.0
-        denom = jnp.where(degen, 1.0, x0 - beta)
-        v = jnp.where(below, x / denom, 0.0) + jnp.where(at, 1.0, 0.0)  # (m,1)
-        tau = jnp.where(
-            degen, 0.0, (beta - x0) / jnp.where(beta == 0.0, 1.0, beta)
-        )                                                       # (1,1)
-        beta_val = jnp.where(degen, x0, beta)
-
-        # --- the fused macro-op: one pass over the panel ---------------
-        w = tau * jnp.sum(v * a, axis=0, keepdims=True)         # (1, b)
-        trailing = cols > lj
-        a = a - jnp.where(trailing, v * w, 0.0)
-
-        # pack column lj: R diag at pivot, reflector below, R above kept
-        a = jnp.where(colmask & at, beta_val, a)
-        a = jnp.where(colmask & below, v, a)
-        taus = jnp.where(colmask, tau, taus)
-        return a, taus
-
-    a_out, taus = lax.fori_loop(0, b, body, (a0, taus0))
-    out_ref[...] = a_out.astype(out_ref.dtype)
-    taus_ref[...] = taus.astype(taus_ref.dtype)
+    packed, taus = macro_ops.panel_body(panel_ref[...], row0)
+    out_ref[...] = packed
+    taus_ref[...] = taus[None]
 
 
 def mht_panel_pallas(

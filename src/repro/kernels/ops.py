@@ -26,16 +26,13 @@ import jax.numpy as jnp
 
 from repro.core.plan import (DEFAULT_VMEM_BUDGET, KernelPolicy,
                              register_kernel_policy)
+from repro.kernels.macro_ops import default_interpret
 from repro.kernels.mht_panel import mht_panel_pallas
 from repro.kernels.wy_trailing import wy_trailing_pallas
 
 Array = jax.Array
 
 __all__ = ["mht_panel", "wy_trailing", "vmem_bytes_mht_panel", "default_interpret"]
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def vmem_bytes_mht_panel(m: int, b: int) -> int:

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 Array = jax.Array
 
 __all__ = ["mht_panel_ref", "wy_trailing_ref", "ht_update_two_pass_ref",
-           "tsqrt_ref", "ssrfb_ref"]
+           "geqrt_ref", "larfb_ref", "tsqrt_ref", "ssrfb_ref"]
 
 
 def mht_panel_ref(panel: Array, row0: int = 0) -> Tuple[Array, Array]:
@@ -39,6 +39,28 @@ def wy_trailing_ref(v: Array, t: Array, c: Array) -> Array:
     w = v32.T @ c32
     w = t.astype(jnp.float32).T @ w
     return (c32 - v32 @ w).astype(dtype)
+
+
+def geqrt_ref(tile: Array) -> Tuple[Array, Array, Array]:
+    """Oracle for :func:`repro.kernels.macro_ops.geqrt_body`.
+
+    QR of one square tile plus its WY block reflector, via the
+    independent :func:`repro.core.blocked.panel_factor` / ``larft``
+    realizations; returns ``(packed, T, taus)``."""
+    from repro.core.blocked import larft, panel_factor, unpack_v_panel
+
+    dtype = tile.dtype
+    packed, taus = panel_factor(tile.astype(jnp.float32), 0, method="mht")
+    t = larft(unpack_v_panel(packed, 0), taus)
+    return packed.astype(dtype), t.astype(dtype), taus.astype(dtype)
+
+
+def larfb_ref(diag_packed: Array, t: Array, c: Array) -> Array:
+    """Oracle for :func:`repro.kernels.macro_ops.larfb_body`:
+    unpack V1 from the packed diagonal tile, then the WY apply."""
+    from repro.core.blocked import unpack_v_panel
+
+    return wy_trailing_ref(unpack_v_panel(diag_packed, 0), t, c)
 
 
 def tsqrt_ref(r: Array, a: Array) -> Tuple[Array, Array, Array]:

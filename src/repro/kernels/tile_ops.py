@@ -1,7 +1,10 @@
-"""Pallas TPU kernels for the tiled-QR macro ops: TSQRT and SSRFB.
+"""Single-tile Pallas wrappers for the TSQRT / SSRFB macro ops.
 
-These are the two tile tasks the existing kernels don't cover
-(:mod:`repro.kernels.mht_panel` realizes GEQRT, ``wy_trailing`` LARFB):
+The macro-op *bodies* live in the unified library
+(:mod:`repro.kernels.macro_ops` — one Householder/WY core shared with
+the panel and trailing kernels and with the wavefront engine's fused
+dispatch).  This module keeps the standalone one-tile entry points:
+handy for tests, benchmarks, and callers outside the tile-DAG engine.
 
   * **TSQRT** — QR of the stacked pair ``[R; A]`` where R is the nb x nb
     upper-triangular tile on top and A a full nb x nb tile below.  Each
@@ -16,10 +19,11 @@ These are the two tile tasks the existing kernels don't cover
     Four chained MXU products fused into one VMEM pass per tile pair.
 
 Both kernels are single-grid-cell (the tile IS the block, like
-``mht_panel``); the wavefront scheduler in :mod:`repro.core.tilegraph`
-vmaps them over the independent tiles of each DAG level.  Oracles:
-:func:`repro.kernels.ref.tsqrt_ref` / ``ssrfb_ref``; interpret mode runs
-the bodies on CPU (the default off-TPU, as in :mod:`repro.kernels.ops`).
+``mht_panel``); the wavefront engine (:mod:`repro.core.engine`) instead
+dispatches whole same-kind task batches as one ``pallas_call`` against
+the tile workspace.  Oracles: :func:`repro.kernels.ref.tsqrt_ref` /
+``ssrfb_ref``; interpret mode runs the bodies on CPU (the default
+off-TPU, as in :mod:`repro.kernels.ops`).
 """
 
 from __future__ import annotations
@@ -29,12 +33,12 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.experimental import pallas as pl
 
 from repro.core.plan import (DEFAULT_VMEM_BUDGET, KernelPolicy,
                              register_kernel_policy)
-from repro.kernels.ops import default_interpret
+from repro.kernels import macro_ops
+from repro.kernels.macro_ops import default_interpret
 
 Array = jax.Array
 
@@ -50,12 +54,12 @@ __all__ = [
 
 def vmem_bytes_tsqrt(nb: int) -> int:
     """fp32 working set: R + A in, R + V2 out, plus the loop carries."""
-    return 6 * nb * nb * 4
+    return macro_ops.vmem_bytes("TSQRT", nb)
 
 
 def vmem_bytes_ssrfb(nb: int) -> int:
     """fp32 working set: V2/T/C_k/C_i in, two tiles out, W scratch."""
-    return 7 * nb * nb * 4
+    return macro_ops.vmem_bytes("SSRFB", nb)
 
 
 def _vmem_bytes_tile(nb: int, _b: int = 0) -> int:
@@ -84,50 +88,10 @@ def tsqrt_kernel(r_ref, a_ref, r_out, v_out, taus_ref):
     v_out:       (nb, nb) V2 — reflector tails, column j in column j
     taus_ref:    (1, nb) tau row
     """
-    nb = r_ref.shape[0]
-    r0 = r_ref[...].astype(jnp.float32)
-    a0 = a_ref[...].astype(jnp.float32)
-    rows = lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
-    cols = lax.broadcasted_iota(jnp.int32, (1, nb), 1)
-
-    def body(j, carry):
-        r, a, vacc, taus = carry
-        colmask = cols == j                                     # (1, nb)
-        pivmask = (rows == j) & colmask                         # (nb, nb)
-        x0 = jnp.sum(jnp.where(pivmask, r, 0.0))                # pivot R[j,j]
-        x2 = jnp.sum(jnp.where(colmask, a, 0.0), axis=1,
-                     keepdims=True)                             # (nb, 1)
-        tail2 = jnp.sum(x2 * x2)
-        norm = jnp.sqrt(x0 * x0 + tail2)
-        beta = jnp.where(x0 >= 0.0, -norm, norm)
-        degen = tail2 == 0.0
-        denom = jnp.where(degen, 1.0, x0 - beta)
-        v2 = x2 / denom                                         # (nb, 1)
-        tau = jnp.where(
-            degen, 0.0, (beta - x0) / jnp.where(beta == 0.0, 1.0, beta))
-        beta_val = jnp.where(degen, x0, beta)
-
-        # Structured macro-op: the reflector is [e_j; v2], so the dot
-        # touches only R's row j plus the A block — one fused pass.
-        rrow = jnp.sum(jnp.where(rows == j, r, 0.0), axis=0,
-                       keepdims=True)                           # (1, nb)
-        w = tau * (rrow + jnp.sum(v2 * a, axis=0, keepdims=True))
-        trailing = cols > j
-        r = r - jnp.where((rows == j) & trailing, w, 0.0)
-        a = a - jnp.where(trailing, v2 * w, 0.0)
-
-        r = jnp.where(pivmask, beta_val, r)
-        vacc = jnp.where(colmask, v2, vacc)
-        taus = jnp.where(colmask, tau, taus)
-        return r, a, vacc, taus
-
-    r_fin, _, vacc, taus = lax.fori_loop(
-        0, nb, body,
-        (r0, a0, jnp.zeros((nb, nb), jnp.float32),
-         jnp.zeros((1, nb), jnp.float32)))
-    r_out[...] = r_fin.astype(r_out.dtype)
-    v_out[...] = vacc.astype(v_out.dtype)
-    taus_ref[...] = taus.astype(taus_ref.dtype)
+    r_new, v2, taus = macro_ops.tsqrt_factor(r_ref[...], a_ref[...])
+    r_out[...] = r_new
+    v_out[...] = v2
+    taus_ref[...] = taus[None]
 
 
 def tsqrt_pallas(r_t: Array, a_t: Array, *, interpret: bool = False
@@ -161,17 +125,10 @@ def tsqrt_pallas(r_t: Array, a_t: Array, *, interpret: bool = False
 
 def ssrfb_kernel(v_ref, t_ref, ck_ref, ci_ref, ck_out, ci_out):
     """One tile pair: W = T^T (C_k + V2^T C_i); C_k -= W; C_i -= V2 W."""
-    v2 = v_ref[...]
-    ck = ck_ref[...].astype(jnp.float32)
-    ci = ci_ref[...]
-    w = ck + jnp.dot(v2.T, ci, preferred_element_type=jnp.float32)
-    w = jnp.dot(t_ref[...].T.astype(jnp.float32), w,
-                preferred_element_type=jnp.float32)
-    ck_out[...] = (ck - w).astype(ck_out.dtype)
-    ci_out[...] = (ci.astype(jnp.float32)
-                   - jnp.dot(v2.astype(jnp.float32), w,
-                             preferred_element_type=jnp.float32)
-                   ).astype(ci_out.dtype)
+    ck, ci = macro_ops.ssrfb_body(v_ref[...], t_ref[...],
+                                  ck_ref[...], ci_ref[...])
+    ck_out[...] = ck
+    ci_out[...] = ci
 
 
 def ssrfb_pallas(v2: Array, t: Array, ck: Array, ci: Array, *,

@@ -7,19 +7,26 @@ entirely in VMEM.  This is the Level-3 counterpart of the paper's fused
 macro-op: the same "never let the intermediate leave the fast memory"
 co-design argument, re-blocked for the 128x128 MXU instead of the DOT4.
 
+The fused product chain is :func:`repro.kernels.macro_ops.wy_body` — the
+ONE WY apply this package owns, shared with the tile-DAG LARFB/SSRFB
+macro ops and the wavefront engine.  This module only streams C through
+it, one column-tile per grid cell.
+
 Grid: one program per C column-tile (bn columns).  V (m, k), T (k, k) are
 broadcast to every program; C tiles stream.  VMEM per program:
 m·bn + m·k + k·k + k·bn floats — the ops wrapper checks the budget and
 requires m ≤ 8192 for k, bn = 128.
 
-All matmuls run with fp32 accumulation (``preferred_element_type``).
+All matmuls accumulate in ``promote_types(dtype, float32)``
+(``preferred_element_type``).
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import macro_ops
 
 Array = jax.Array
 
@@ -28,15 +35,7 @@ __all__ = ["wy_trailing_kernel", "wy_trailing_pallas"]
 
 def wy_trailing_kernel(v_ref, t_ref, c_ref, out_ref):
     """One C column-tile: W = V^T C (MXU), X = T^T W (MXU), C -= V X (MXU)."""
-    v = v_ref[...]
-    c = c_ref[...]
-    t = t_ref[...]
-    w = jnp.dot(v.T, c, preferred_element_type=jnp.float32)        # (k, bn)
-    x = jnp.dot(t.T.astype(jnp.float32), w,
-                preferred_element_type=jnp.float32)                # (k, bn)
-    upd = jnp.dot(v.astype(jnp.float32), x,
-                  preferred_element_type=jnp.float32)              # (m, bn)
-    out_ref[...] = (c.astype(jnp.float32) - upd).astype(out_ref.dtype)
+    out_ref[...] = macro_ops.wy_body(v_ref[...], t_ref[...], c_ref[...])
 
 
 def wy_trailing_pallas(

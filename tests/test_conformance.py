@@ -182,6 +182,29 @@ def test_kernel_path_conformance(method, matrices):
     _assert_conformance(a, q, r, _tol("float32", 64, 32))
 
 
+@pytest.mark.parametrize("method", METHODS)
+def test_engine_path_bitwise_vs_oracle(method, matrices):
+    """Every registry method executing through the wavefront macro-op
+    engine (kernel_policy == "macro_ops" — today `tiled` and
+    `sharded_tiled`, plus any future engine-backed backend for free)
+    must produce BITWISE-identical (Q, R) on its kernel path
+    (one in-place Pallas dispatch per DAG level, interpret mode on CPU)
+    and its ``use_kernel=False`` jnp-oracle lowering.  Not a tolerance —
+    equality."""
+    if get_method(method).kernel_policy != "macro_ops":
+        pytest.skip("capability: method does not execute through "
+                    "repro.core.engine")
+    a = matrices.well_conditioned(48, 32, cond=100.0)
+    sk = _plan_or_skip(a.shape, a.dtype,
+                       QRConfig(method=method, block=BLOCK, use_kernel=True))
+    sj = _plan_or_skip(a.shape, a.dtype,
+                       QRConfig(method=method, block=BLOCK, use_kernel=False))
+    qk, rk = sk.solve(a)
+    qj, rj = sj.solve(a)
+    assert bool((qk == qj).all()), "engine Q != oracle Q (bitwise)"
+    assert bool((rk == rj).all()), "engine R != oracle R (bitwise)"
+
+
 def test_registry_has_all_expected_methods():
     """The suite is only meaningful if it sweeps the full registry."""
     for name in ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr", "tiled",

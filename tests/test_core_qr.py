@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from hypothesis_compat import given, settings, st
 
 from repro.core import (
+    QRConfig,
     apply_q,
     form_q,
     geqr2,
@@ -77,7 +78,7 @@ def test_blocked_matches_unblocked(m, n, block, panel_method):
 @pytest.mark.parametrize("m,n", [(16, 8), (32, 32)])
 def test_matches_jnp_linalg_qr(m, n):
     a = _rand(m, n, seed=7)
-    q, r = qr(a, method="geqrf_ht", block=8)
+    q, r = qr(a, config=QRConfig(method="geqrf_ht", block=8))
     qn, rn = jnp.linalg.qr(a)
     s = jnp.sign(jnp.diagonal(r)) * jnp.sign(jnp.diagonal(rn))
     np.testing.assert_allclose(np.asarray(r * s[:, None]), np.asarray(rn), atol=3e-5)
@@ -119,7 +120,7 @@ def test_qr_full_mode(m, n):
     from repro.core import QRConfig, plan
 
     a = _rand(m, n, seed=m * 7 + n)
-    out = qr(a, mode="full")
+    out = qr(a, config=QRConfig(method="geqrf_ht", mode="full"))
     assert isinstance(out, tuple) and len(out) == 2
     q, r = out
     assert q.shape == (m, m), "full Q must be m x m"

@@ -1,0 +1,237 @@
+"""Wavefront macro-op engine tests (repro.core.engine).
+
+The engine's contract is *bitwise* equivalence between its two
+lowerings of the static wavefront schedule:
+
+  * ``use_kernel=True``  — one in-place Pallas dispatch per
+    (wavefront, kind) task batch over the tile workspace (interpret
+    mode on CPU);
+  * ``use_kernel=False`` — the vmapped pure-jnp oracle of the same
+    macro-op bodies.
+
+Covered here: per-(wavefront, kind) dispatch vs the jnp lowering from
+identical pre-state (the per-macro-op bitwise property), end-to-end
+``factor_tiles`` / ``tiled_qr`` bitwise equality, macro-op bodies vs the
+independent ``kernels/ref`` oracles, the schedule batch census, the
+workspace-donation contract, and the VMEM/shape guards.  The
+registry-wide engine hook lives in tests/test_conformance.py.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from hypothesis_compat import given, settings, st
+
+from repro.core import engine
+from repro.core.tilegraph import tiled_qr, wavefronts
+from repro.kernels import macro_ops, ref
+
+
+def _workspace(p, q, nb, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((p, q, nb, nb)), jnp.float32)
+
+
+def _assert_state_bitwise(a: engine.FactorState, b: engine.FactorState):
+    for name, xa, xb in zip(a._fields, a, b):
+        assert bool((xa == xb).all()), (
+            f"{name} differs: max |delta| = "
+            f"{float(jnp.abs(xa - xb).max()):.3e}")
+
+
+# ---------------------------------------------------------------- schedule
+
+@pytest.mark.parametrize("p,q", [(1, 1), (3, 3), (5, 2), (2, 4)])
+def test_wavefront_batches_cover_schedule(p, q):
+    """The dispatchable batches are exactly the levelized task DAG."""
+    batches = engine.wavefront_task_arrays(p, q)
+    levels = wavefronts(p, q)
+    assert len(batches) == len(levels)
+    for by_kind, level in zip(batches, levels):
+        tasks = {(t.kind, t.k, t.i, t.j) for t in level}
+        batched = {(kind, int(k), int(i), int(j))
+                   for kind, idx in by_kind.items()
+                   for k, i, j in idx}
+        assert batched == tasks
+
+
+# ------------------------------------------------- per-macro-op bitwise
+
+@pytest.mark.parametrize("p,q", [(3, 3), (4, 2), (2, 3)])
+def test_each_wavefront_kind_bitwise(p, q):
+    """Every (wavefront, kind) Pallas dispatch matches the jnp lowering
+    bitwise when started from the identical pre-wavefront state — the
+    per-macro-op property, with realistic (mid-factorization) inputs."""
+    nb = 8
+    r = min(p, q)
+    dt = jnp.float32
+    state = engine.FactorState(
+        _workspace(p, q, nb, seed=p * 10 + q),
+        jnp.zeros((r, nb, nb), dt), jnp.zeros((r, nb), dt),
+        jnp.zeros((p, r, nb, nb), dt), jnp.zeros((p, r, nb), dt))
+    seen = set()
+    for by_kind in engine.wavefront_task_arrays(p, q):
+        for kind, idx in by_kind.items():
+            seen.add(kind)
+            jnp_next = engine._jnp_wavefront(state, {kind: idx})
+            pls_next = engine._DISPATCH[kind](state, idx, nb, True)
+            _assert_state_bitwise(jnp_next, pls_next)
+        # advance on the oracle path so later levels see factored state
+        state = engine._jnp_wavefront(state, by_kind)
+    if p > 1 and q > 1:
+        assert seen == {"GEQRT", "LARFB", "TSQRT", "SSRFB"}
+
+
+# ------------------------------------------------------ end-to-end bitwise
+
+@pytest.mark.parametrize("p,q", [(1, 1), (2, 2), (4, 4), (5, 2), (2, 4)])
+def test_factor_tiles_bitwise(p, q):
+    nb = 8
+    ws = _workspace(p, q, nb, seed=42)
+    f_jnp = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=False)
+    f_pls = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=True)
+    _assert_state_bitwise(f_jnp, f_pls)
+
+
+@settings(max_examples=8, deadline=None)
+@given(p=st.integers(1, 4), q=st.integers(1, 4), seed=st.integers(0, 1000))
+def test_property_factor_tiles_bitwise(p, q, seed):
+    nb = 4
+    ws = _workspace(p, q, nb, seed=seed)
+    f_jnp = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=False)
+    f_pls = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=True)
+    _assert_state_bitwise(f_jnp, f_pls)
+
+
+@pytest.mark.parametrize("m,n", [(64, 64), (96, 48), (48, 96), (70, 50)])
+def test_tiled_qr_engine_bitwise(m, n):
+    """tiled_qr's kernel path (engine Pallas dispatch) is bitwise equal
+    to its jnp-oracle path, through padding, Q formation and all."""
+    rng = np.random.default_rng(m + n)
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    qk, rk = tiled_qr(a, tile=16, use_kernel=True)
+    qj, rj = tiled_qr(a, tile=16, use_kernel=False)
+    assert bool((qk == qj).all()) and bool((rk == rj).all())
+
+
+def test_factor_tiles_matches_dense_qr():
+    """The engine's R (joined from the workspace) matches jnp.linalg.qr
+    up to column signs — anchoring the bitwise pair to ground truth."""
+    m = n = 64
+    nb = 16
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    q, r = tiled_qr(a, tile=nb, use_kernel=True)
+    rn = jnp.linalg.qr(a)[1]
+    s = jnp.sign(jnp.diagonal(r)) * jnp.sign(jnp.diagonal(rn))
+    np.testing.assert_allclose(np.asarray(r * s[:, None]), np.asarray(rn),
+                               atol=5e-4)
+
+
+# -------------------------------------------------- macro-op body oracles
+
+def test_geqrt_body_matches_ref():
+    tile = _workspace(1, 1, 16, seed=1)[0, 0]
+    pk, tk, tauk = macro_ops.geqrt_body(tile)
+    pr, tr, taur = ref.geqrt_ref(tile)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(tk), np.asarray(tr), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(tauk), np.asarray(taur), atol=3e-5)
+
+
+def test_larfb_body_matches_ref():
+    tile = _workspace(1, 1, 16, seed=2)[0, 0]
+    packed, t, _ = macro_ops.geqrt_body(tile)
+    c = _workspace(1, 1, 16, seed=3)[0, 0]
+    np.testing.assert_allclose(
+        np.asarray(macro_ops.larfb_body(packed, t, c)),
+        np.asarray(ref.larfb_ref(packed, t, c)), atol=3e-5)
+
+
+def test_tsqrt_body_matches_ref():
+    nb = 16
+    diag = jnp.triu(_workspace(1, 1, nb, seed=4)[0, 0])
+    sub = _workspace(1, 1, nb, seed=5)[0, 0]
+    mk, vk, tk, tauk = macro_ops.tsqrt_body(diag, sub)
+    rr, vr, taur = ref.tsqrt_ref(diag, sub)
+    np.testing.assert_allclose(np.asarray(jnp.triu(mk)), np.asarray(rr),
+                               atol=3e-5)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(tauk), np.asarray(taur), atol=3e-5)
+    np.testing.assert_allclose(
+        np.asarray(tk), np.asarray(macro_ops.stacked_larft(vr, taur)),
+        atol=3e-5)
+
+
+def test_tsqrt_body_passes_packed_subdiagonal_through():
+    """The diagonal tile carries V1 below its diagonal — TSQRT must
+    factor the upper triangle only and keep the packed V1 bit-for-bit."""
+    nb = 8
+    diag = _workspace(1, 1, nb, seed=6)[0, 0]  # dense: lower part is "V1"
+    sub = _workspace(1, 1, nb, seed=7)[0, 0]
+    merged, _, _, _ = macro_ops.tsqrt_body(diag, sub)
+    lower = jnp.tril(jnp.ones((nb, nb), bool), -1)
+    assert bool(jnp.where(lower, merged == diag, True).all())
+
+
+def test_ssrfb_body_matches_ref():
+    nb = 16
+    diag = jnp.triu(_workspace(1, 1, nb, seed=8)[0, 0])
+    sub = _workspace(1, 1, nb, seed=9)[0, 0]
+    _, v2, t, _ = macro_ops.tsqrt_body(diag, sub)
+    ck = _workspace(1, 1, nb, seed=10)[0, 0]
+    ci = _workspace(1, 1, nb, seed=11)[0, 0]
+    got = macro_ops.ssrfb_body(v2, t, ck, ci)
+    want = ref.ssrfb_ref(v2, t, ck, ci)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=3e-5)
+
+
+# --------------------------------------------------------------- donation
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_factor_tiles_donates_workspace(use_kernel):
+    """The factor loop consumes the caller's workspace buffer — the hot
+    path must not retain a second copy of the input tile array."""
+    ws = _workspace(3, 3, 8, seed=12)
+    out = engine.factor_tiles(ws, p=3, q=3, nb=8, use_kernel=use_kernel)
+    jax.block_until_ready(out.tiles)
+    assert ws.is_deleted(), "input workspace was retained, not donated"
+
+
+def test_tiled_qr_does_not_consume_user_input():
+    """Donation is an engine-internal contract: the public tiled_qr
+    caller's matrix survives (the workspace is built from a fresh
+    split/pad, never the user's buffer)."""
+    a = _workspace(1, 1, 64, seed=13)[0, 0]
+    tiled_qr(a, tile=16, use_kernel=False)
+    assert not a.is_deleted()
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a))  # readable
+
+
+# ----------------------------------------------------------------- guards
+
+def test_factor_tiles_shape_guard():
+    ws = _workspace(2, 2, 8)
+    with pytest.raises(ValueError, match="workspace"):
+        engine.factor_tiles(ws, p=2, q=3, nb=8)
+
+
+def test_factor_tiles_vmem_guard():
+    """Tiles past the kernel-policy budget are refused on the kernel
+    path (same number the planner uses), and allowed on the jnp path."""
+    nb = 2048  # 7 * 2048^2 * 4 bytes > the shared 8 MiB budget
+    need = macro_ops.engine_vmem_bytes(nb)
+    assert need > macro_ops._POLICY.vmem_budget
+    ws = jnp.zeros((1, 1, nb, nb), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        engine.factor_tiles(ws, p=1, q=1, nb=nb, use_kernel=True)
+
+
+def test_engine_vmem_estimator_is_worst_case():
+    for kind in macro_ops.MACRO_OPS:
+        assert macro_ops.vmem_bytes(kind, 32) <= macro_ops.engine_vmem_bytes(32)
+    # SSRFB holds the most tiles resident
+    assert macro_ops.engine_vmem_bytes(32) == macro_ops.vmem_bytes("SSRFB", 32)

@@ -189,11 +189,11 @@ def test_tsqrt_degenerate_zero_tail():
 
 @pytest.mark.parametrize("nb", [4, 8, 16, 32])
 def test_ssrfb_matches_ref(nb):
-    from repro.core.tilegraph import _larft_stacked
+    from repro.kernels.macro_ops import stacked_larft
 
     r, a = _tsqrt_inputs(nb, seed=nb + 7)
     _, v2, taus = ref.tsqrt_ref(r, a)
-    t = _larft_stacked(v2, taus)
+    t = stacked_larft(v2, taus)
     ck, ci = _rand((nb, nb), seed=1), _rand((nb, nb), seed=2)
     ck_k, ci_k = tile_ops.ssrfb(v2, t, ck, ci)
     ck_r, ci_r = ref.ssrfb_ref(v2, t, ck, ci)
@@ -213,7 +213,7 @@ def test_tile_ops_vmem_guards():
 @settings(max_examples=10, deadline=None)
 @given(nb=st.integers(2, 24), seed=st.integers(0, 10_000))
 def test_property_tsqrt_ssrfb(nb, seed):
-    from repro.core.tilegraph import _larft_stacked
+    from repro.kernels.macro_ops import stacked_larft
 
     rng = np.random.default_rng(seed)
     r = jnp.triu(jnp.asarray(rng.standard_normal((nb, nb)), jnp.float32))
@@ -222,7 +222,7 @@ def test_property_tsqrt_ssrfb(nb, seed):
     rr, vr, tr = ref.tsqrt_ref(r, a)
     np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=5e-5)
     np.testing.assert_allclose(np.asarray(vk), np.asarray(vr), atol=5e-5)
-    t = _larft_stacked(vr, tr)
+    t = stacked_larft(vr, tr)
     c = jnp.asarray(rng.standard_normal((2, nb, nb)), jnp.float32)
     out_k = tile_ops.ssrfb(vr, t, c[0], c[1])
     out_r = ref.ssrfb_ref(vr, t, c[0], c[1])

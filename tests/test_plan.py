@@ -2,12 +2,11 @@
 
 Covers the planner redesign: registry round-trip, QRConfig hashability
 under jit static args, the method="auto" routing table, batched solve vs
-the jnp.linalg.qr oracle, the legacy string-kwarg shim, and the
-mode="full" regression.
+the jnp.linalg.qr oracle, the config-only API surface (the PR-1 legacy
+string-kwarg shim is removed), and the mode="full" regression.
 """
 
 import functools
-import warnings
 
 import numpy as np
 import pytest
@@ -51,7 +50,7 @@ def test_unknown_method_errors():
     with pytest.raises(ValueError, match="unknown method"):
         plan((8, 8), jnp.float32, QRConfig(method="nope"))
     with pytest.raises(ValueError, match="unknown method"):
-        qr(_rand(8, 8), method="nope")
+        qr(_rand(8, 8), config=QRConfig(method="nope"))
 
 
 def test_builtins_registered():
@@ -266,42 +265,29 @@ def test_batched_auto_tsqr():
     np.testing.assert_allclose(np.asarray(rec), np.asarray(a), atol=1e-4)
 
 
-# ------------------------------------------------------------- legacy shim
+# ---------------------------------------------------- post-shim API surface
 
-def test_legacy_shim_identical_to_planner():
-    a = _rand(48, 20, seed=8)
-    with pytest.warns(DeprecationWarning):
-        q1, r1 = qr(a, method="geqrf_ht")
-    q2, r2 = plan(a.shape, a.dtype, QRConfig(method="geqrf_ht")).solve(a)
-    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
-    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
-
-
-def test_legacy_defaults_silent_and_unchanged():
-    a = _rand(32, 12, seed=9)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        q1, r1 = qr(a)  # no legacy kwargs — no deprecation noise
-    assert not any(issubclass(w.category, DeprecationWarning) for w in caught)
-    # pre-registry default was geqrf_ht/block=32/no kernel
-    q2, r2 = plan(a.shape, a.dtype,
-                  QRConfig(method="geqrf_ht", block=32, use_kernel=False)
-                  ).solve(a)
-    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
-    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
-
-
-def test_config_plus_legacy_kwargs_rejected():
+def test_legacy_string_kwargs_removed():
+    """The PR-1 deprecation shim is gone: string kwargs are a TypeError,
+    not a DeprecationWarning."""
     a = _rand(16, 8, seed=10)
-    with pytest.raises(ValueError, match="not both"):
-        qr(a, config=QRConfig(), method="geqr2")
+    with pytest.raises(TypeError):
+        qr(a, method="geqrf_ht")
+    with pytest.raises(TypeError):
+        qr(a, block=8)
+    with pytest.raises(TypeError):
+        orthogonalize(a, method="geqr2_ht")
+    with pytest.raises(TypeError):
+        lstsq(a, a[:, 0], method="geqrf")
 
 
-def test_legacy_tsqr_kwarg_still_routes():
-    a = _rand(240, 12, seed=11)
-    with pytest.warns(DeprecationWarning):
-        q, r = qr(a, method="tsqr")
-    np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=1e-4)
+def test_qr_default_config_is_auto_planner():
+    """qr(a) with no config plans with QRConfig() — the auto route."""
+    a = _rand(32, 12, seed=9)
+    q1, r1 = qr(a)
+    q2, r2 = plan(a.shape, a.dtype, QRConfig()).solve(a)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
 
 
 # ------------------------------------------------ wrappers through planner
