@@ -14,10 +14,15 @@ level the old scheduler gathered each kind's tiles out of a functional
 each scatter group materializing a FULL fresh workspace (read + write of
 all p*q tiles).  The macro-op engine (:mod:`repro.core.engine`) instead
 DMAs exactly the tiles each task touches against an aliased in-place
-workspace.  :func:`wavefront_traffic` prices both paths per wavefront
-from the static schedule + the per-op tile_reads/tile_writes cards in
-:mod:`repro.kernels.macro_ops` (reflector-state arrays, ~nb/tile smaller,
-are ignored on both sides).
+workspace, and its single-dispatch **megakernel** mode goes one step
+further: consecutive tasks re-reading a tile (or block reflector) the
+double buffer already holds take a VMEM-local copy instead of touching
+HBM again, so per-task DMA drops below the per-level wavefront mode's —
+while the dispatch count collapses from O(levels x kinds) pallas_calls
+per factorization to exactly ONE.  :func:`wavefront_traffic` prices all
+three paths per wavefront from the static schedule + the per-op
+tile_reads/tile_writes cards in :mod:`repro.kernels.macro_ops`
+(reflector-state arrays, ~nb/tile smaller, are ignored on all sides).
 
 Also times the Pallas kernels (interpret mode) against their oracles to
 pin the numbers to a real implementation.
@@ -47,14 +52,20 @@ def _bytes_model(m, b):
 
 
 def wavefront_traffic(p: int, q: int, nb: int, itemsize: int = 4) -> list:
-    """Per-wavefront HBM bytes: old gather/scatter path vs the engine.
+    """Per-wavefront HBM bytes: old gather/scatter path vs the engine's
+    two dispatch modes.
 
     Returns one dict per DAG level with ``old_bytes`` (per-task gathered
-    tiles + one full-workspace copy per scatter group) and
-    ``engine_bytes`` (per-task DMA'd tiles only).
+    tiles + one full-workspace copy per scatter group), ``engine_bytes``
+    (wavefront mode: per-task DMA'd tiles only — every operand re-fetched
+    from HBM each level), and ``megakernel_bytes`` (same per-task DMA
+    minus the fetches the persistent kernel's double buffer serves from
+    the resident copy, per :func:`repro.core.engine.
+    megakernel_reused_reads`).
     """
     tile = nb * nb * itemsize
     workspace = p * q * tile
+    reused = engine.megakernel_reused_reads(p, q)
     out = []
     for lvl, by_kind in enumerate(engine.wavefront_task_arrays(p, q)):
         old = eng = 0
@@ -69,7 +80,8 @@ def wavefront_traffic(p: int, q: int, nb: int, itemsize: int = 4) -> list:
             # array copies behind each .at[].set group (read + write)
             old += moved + _OLD_SCATTER_GROUPS[kind] * 2 * workspace
         out.append(dict(level=lvl, ntasks=ntasks, old_bytes=old,
-                        engine_bytes=eng))
+                        engine_bytes=eng,
+                        megakernel_bytes=eng - int(reused[lvl]) * tile))
     return out
 
 
@@ -93,33 +105,47 @@ def run() -> list:
         rows.append((f"fig13_kernel_check_{m}x{b}", dt,
                      f"max_err_vs_oracle={err:.2e}"))
 
-    # -- tiled-DAG wavefront traffic: gather/scatter vs workspace engine --
-    for (p, q, nb) in [(8, 8, 64), (16, 4, 64)]:
+    # -- tiled-DAG wavefront traffic: gather/scatter vs engine modes ------
+    for (p, q, nb) in [(8, 8, 64), (16, 4, 64), (16, 16, 64)]:
         levels = wavefront_traffic(p, q, nb)
         tot_old = sum(l["old_bytes"] for l in levels)
         tot_eng = sum(l["engine_bytes"] for l in levels)
+        tot_meg = sum(l["megakernel_bytes"] for l in levels)
         rows.append((
             f"wavefront_traffic_total_{p}x{q}t{nb}", 0.0,
             f"old_bytes={tot_old};engine_bytes={tot_eng};"
-            f"saved={1.0 - tot_eng / tot_old:.1%}"))
+            f"megakernel_bytes={tot_meg};"
+            f"saved={1.0 - tot_eng / tot_old:.1%};"
+            f"mega_vs_wavefront={1.0 - tot_meg / tot_eng:.1%}"))
+        stats = engine.schedule_stats(p, q, nb)
+        rows.append((
+            f"dispatch_count_{p}x{q}t{nb}", 0.0,
+            f"wavefront_dispatches={stats['wavefront']['dispatches']};"
+            f"megakernel_dispatches={stats['megakernel']['dispatches']};"
+            f"reduction={stats['wavefront']['dispatches']}x->1;"
+            f"table_bytes={stats['megakernel']['table_bytes']}"))
         for l in levels[:: max(1, len(levels) // 4)]:  # a few sample levels
             rows.append((
                 f"wavefront_traffic_L{l['level']}_{p}x{q}t{nb}", 0.0,
                 f"ntasks={l['ntasks']};old_bytes={l['old_bytes']};"
-                f"engine_bytes={l['engine_bytes']}"))
+                f"engine_bytes={l['engine_bytes']};"
+                f"megakernel_bytes={l['megakernel_bytes']}"))
 
-    # pin to implementation: the engine's two lowerings must agree
-    # bitwise on a real workspace (interpret-mode Pallas on CPU)
+    # pin to implementation: the engine's kernel lowerings (per-level
+    # wavefront dispatches AND the single-call megakernel) must agree
+    # bitwise with the oracle on a real workspace (interpret-mode Pallas)
     p = q = 3
     nb = 16
     ws = jnp.asarray(
         np.random.default_rng(1).standard_normal((p, q, nb, nb)), jnp.float32)
-    t0 = time.perf_counter()
-    f_eng = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=True)
-    jax.block_until_ready(f_eng.tiles)
-    dt = (time.perf_counter() - t0) * 1e6
-    f_jnp = engine.factor_tiles(ws, p=p, q=q, nb=nb, use_kernel=False)
-    bitwise = all(bool((a == b).all()) for a, b in zip(f_eng, f_jnp))
-    rows.append((f"wavefront_engine_check_{p}x{q}t{nb}", dt,
-                 f"bitwise_vs_oracle={bitwise}"))
+    f_jnp = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=False)
+    for mode in engine.DISPATCH_MODES:
+        t0 = time.perf_counter()
+        f_eng = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb,
+                                    use_kernel=True, dispatch_mode=mode)
+        jax.block_until_ready(f_eng.tiles)
+        dt = (time.perf_counter() - t0) * 1e6
+        bitwise = all(bool((a == b).all()) for a, b in zip(f_eng, f_jnp))
+        rows.append((f"{mode}_engine_check_{p}x{q}t{nb}", dt,
+                     f"bitwise_vs_oracle={bitwise}"))
     return rows

@@ -14,12 +14,17 @@ shape): on a 1-device host that is the d=1 degenerate row; under
 the scaling trajectory over d in {1, 2, 4, 8}.
 
 Engine rows: methods executing through the wavefront macro-op engine
-(``tiled`` / ``sharded_tiled``) are timed twice — engine-off
+(``tiled`` / ``sharded_tiled``) are timed three ways — engine-off
 (``use_kernel=False``, the vmapped jnp-oracle lowering) under the plain
-method label, and engine-on (``use_kernel=True``, one in-place Pallas
-dispatch per DAG level; interpret mode on CPU) as ``<method>+engine`` —
-so the refactor's win/parity is recorded in the same BENCH_qr.json.
-Records carry an ``engine`` boolean for trajectory queries.
+method label, engine-on wavefront mode (``use_kernel=True,
+dispatch_mode="wavefront"``: one in-place Pallas dispatch per DAG level;
+interpret mode on CPU) as ``<method>+engine``, and the single-dispatch
+persistent-kernel mode (``dispatch_mode="megakernel"``: the whole
+schedule as ONE pallas_call over a scalar-prefetched task table with
+double-buffered tile DMA) as ``<method>+megakernel`` — so the dispatch
+trajectory is recorded in the same BENCH_qr.json.  Records carry an
+``engine`` boolean and a ``dispatch_mode`` field (null on jnp paths)
+for trajectory queries.
 """
 
 import time
@@ -104,16 +109,26 @@ def sweep(smoke: bool = False) -> list:
                 if method in _ENGINE_METHODS:
                     # pin the baseline to the jnp-oracle lowering (the
                     # planner would resolve use_kernel=None -> True on
-                    # TPU), then add the engine-on twin of every row.
+                    # TPU), then add the engine-on twins of every row:
+                    # per-level wavefront dispatches (+engine) and the
+                    # single persistent-kernel dispatch (+megakernel).
                     # Off-TPU the engine runs interpret-mode Pallas, far
-                    # too slow for the full grid — twin only in smoke
+                    # too slow for the full grid — twins only in smoke
                     # (the CI record) or on real kernel hardware.
                     cfgs = [(lbl, c.replace(use_kernel=False))
                             for lbl, c in cfgs]
                     if smoke or jax.default_backend() == "tpu":
-                        cfgs.extend((f"{lbl}+engine",
-                                     c.replace(use_kernel=True))
-                                    for lbl, c in list(cfgs))
+                        base = list(cfgs)
+                        cfgs.extend(
+                            (f"{lbl}+engine",
+                             c.replace(use_kernel=True,
+                                       dispatch_mode="wavefront"))
+                            for lbl, c in base)
+                        cfgs.extend(
+                            (f"{lbl}+megakernel",
+                             c.replace(use_kernel=True,
+                                       dispatch_mode="megakernel"))
+                            for lbl, c in base)
                 for label, cfg in cfgs:
                     try:
                         solver = plan(a.shape, a.dtype, cfg)
@@ -126,6 +141,7 @@ def sweep(smoke: bool = False) -> list:
                         gflops=_qr_flops(m, n) / dt / 1e9,
                         engine=bool(solver.config.use_kernel)
                         and solver.config.method in ("tiled", "sharded_tiled"),
+                        dispatch_mode=solver.config.dispatch_mode,
                     )
                     if method == "sharded_tiled":
                         rec.update(ndevices=jax.local_device_count(),

@@ -67,7 +67,9 @@ def main() -> None:
 
     if qr_records is not None and args.json:
         with open(args.json, "w") as f:
-            json.dump({"schema": "qr-bench-v1", "smoke": args.smoke,
+            # v2: records carry a dispatch_mode field (engine lowering:
+            # "wavefront" / "megakernel" / null on jnp-oracle paths)
+            json.dump({"schema": "qr-bench-v2", "smoke": args.smoke,
                        "records": qr_records}, f, indent=1)
         print(f"wrote {len(qr_records)} records to {args.json}",
               file=sys.stderr)

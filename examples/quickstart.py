@@ -60,11 +60,31 @@ def main():
     print(f"tiled ops/DAG-level vs MHT at n=128: {beta_gain:.0f}x")
 
     # the engine knob: the Pallas path is bitwise-equal to the oracle
+    # (wavefront mode pinned — auto would pick megakernel here)
     qe, re_ = qr(a, config=QRConfig(method="tiled", block=64,
-                                    use_kernel=True))
+                                    use_kernel=True,
+                                    dispatch_mode="wavefront"))
     print(f"{'engine':10s} bitwise_vs_oracle="
           f"{bool((qe == qt).all()) and bool((re_ == rt).all())} "
           f"(one Pallas dispatch per DAG level, in-place workspace)")
+
+    # the dispatch-mode knob: "megakernel" collapses the whole schedule
+    # into ONE persistent Pallas dispatch — the grid walks a
+    # scalar-prefetched task table, switching on task kind, with task
+    # t+1's tile DMA overlapping task t's compute (double buffering).
+    # None (the default) picks it automatically whenever the table and
+    # the working set fit the budgets; bitwise-equal either way.
+    from repro.core.engine import schedule_stats
+
+    qm, rm = qr(a, config=QRConfig(method="tiled", block=64,
+                                   use_kernel=True,
+                                   dispatch_mode="megakernel"))
+    stats = schedule_stats(512 // 64, 128 // 64, nb=64)
+    print(f"{'megakernel':10s} bitwise_vs_oracle="
+          f"{bool((qm == qt).all()) and bool((rm == rt).all())} "
+          f"(dispatches {stats['wavefront']['dispatches']} -> "
+          f"{stats['megakernel']['dispatches']}, table "
+          f"{stats['megakernel']['table_bytes']} B, auto={stats['auto']})")
 
     # 2c. the multi-device sharded tiled backend: the tile grid splits
     #     into per-device row-block domains (shard_map), each runs its

@@ -7,9 +7,12 @@ Layers:
     tsqr         communication-avoiding distributed QR over mesh axes
     tilegraph    tiled task-graph QR: GEQRT/TSQRT/LARFB/SSRFB tile DAG,
                  statically wavefront-scheduled (cross-panel parallelism)
-    engine       wavefront macro-op engine: executes each DAG level as
-                 one in-place Pallas dispatch over the tile workspace
-                 (or the bitwise-identical vmapped jnp oracle)
+    engine       wavefront macro-op engine: executes the levelized DAG
+                 as one in-place Pallas dispatch per level
+                 (dispatch_mode="wavefront"), as ONE persistent
+                 task-table dispatch with double-buffered tile DMA
+                 ("megakernel"), or as the bitwise-identical vmapped
+                 jnp oracle (use_kernel=False)
     distgraph    multi-device sharded tiled QR: per-device row-block
                  wavefront domains (shard_map) + TSQR-style R merge tree
     dag          beta/theta parallelism quantification (paper fig 9),
@@ -38,6 +41,7 @@ from repro.core.plan import (
     plan,
     register_method,
 )
+from repro.core.engine import schedule_stats
 from repro.core.tilegraph import (
     sharded_wavefront_count,
     tiled_qr,
@@ -54,6 +58,6 @@ __all__ = [
     "geqr2", "geqr2_ht", "geqrf", "geqrf_fori", "larft",
     "house_vector", "apply_q", "form_q", "unpack_r", "unpack_v", "mht_update",
     "tsqr_r", "tsqr_qr", "tsqr_tree_sharded", "distributed_qr",
-    "tiled_qr", "wavefronts", "wavefront_count",
+    "tiled_qr", "wavefronts", "wavefront_count", "schedule_stats",
     "sharded_tiled_qr", "sharded_wavefront_count",
 ]

@@ -16,8 +16,13 @@ Every realization lives in the method registry (see
     "tsqr"       tall-skinny tree QR (single device)
     "tiled"      tiled task-graph QR via the wavefront macro-op engine
                  (GEQRT/TSQRT/LARFB/SSRFB; block = tile size;
-                 use_kernel=True -> one in-place Pallas dispatch per DAG
-                 level, False -> the bitwise-identical jnp oracle)
+                 use_kernel=True -> Pallas dispatch per
+                 QRConfig.dispatch_mode: "wavefront" = one in-place
+                 call per DAG level, "megakernel" = the whole schedule
+                 as ONE persistent call over a scalar-prefetched task
+                 table with double-buffered tile DMA, None = auto by
+                 table/VMEM budgets; False -> the bitwise-identical
+                 jnp oracle)
     "sharded_tiled"  multi-device tiled QR: per-device row-block
                  wavefront domains via shard_map + TSQR-style R merge
                  tree (ndomains = device domains; testable on CPU with

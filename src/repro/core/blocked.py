@@ -222,7 +222,9 @@ register_method(MethodSpec(
 ))
 
 
-def _resolve_geqrf_fori(m: int, n: int, cfg: QRConfig) -> QRConfig:
+def _resolve_geqrf_fori(m: int, n: int, cfg: QRConfig, *, dtype=None
+                        ) -> QRConfig:
+    del dtype  # divisibility is element-width independent
     k = min(m, n)
     if k % cfg.block != 0:
         raise ValueError(

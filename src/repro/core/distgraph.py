@@ -18,7 +18,9 @@ al., arXiv:0707.3548) — mapped onto a JAX device mesh:
      the ordinary GEQRT/TSQRT/LARFB/SSRFB wavefront schedule on its own
      (p/d x q) sub-grid through the same :func:`repro.core.engine.
      factor_tiles` loop as the single-device backend — zero cross-device
-     traffic during the sweep, one execution path for both backends.
+     traffic during the sweep, one execution path for both backends
+     (``dispatch_mode`` selects the kernel lowering per domain sweep:
+     per-level wavefront dispatches or the single-call megakernel).
   3. **Hierarchical R merge**: the per-domain R factors reduce through
      the TSQR butterfly tree (:func:`repro.core.tsqr.butterfly_merge_r`),
      exchanging one n x n triangle per link per round; after
@@ -93,48 +95,53 @@ def _pad_rows(x: Array, rows: int) -> Array:
         x, ((0, rows - x.shape[0]), (0, 0)))
 
 
-def _domain_r(a_dom: Array, tile: int, use_kernel: bool) -> Array:
+def _domain_r(a_dom: Array, tile: int, use_kernel: bool,
+              dispatch_mode) -> Array:
     """Domain-local R via the tiled wavefront schedule, padded to n x n
     (domains shorter than n contribute zero rows to the merge stack)."""
     n = a_dom.shape[1]
     return _pad_rows(tiled_qr(a_dom, tile=tile, mode="r",
-                              use_kernel=use_kernel), n)
+                              use_kernel=use_kernel,
+                              dispatch_mode=dispatch_mode), n)
 
 
-def _merged_r(a_dom: Array, tile: int, use_kernel: bool) -> Array:
+def _merged_r(a_dom: Array, tile: int, use_kernel: bool,
+              dispatch_mode) -> Array:
     """Global R from inside shard_map: local tiled wavefronts, then the
     TSQR butterfly over n x n triangles (combine = stacked blocked QR,
     the same tree :func:`repro.core.tsqr.tsqr_tree_sharded` runs)."""
     from repro.core.tsqr import _local_r  # combine logic, shared with TSQR
 
     n = a_dom.shape[1]
-    r = _domain_r(a_dom, tile, use_kernel)
+    r = _domain_r(a_dom, tile, use_kernel, dispatch_mode)
     return butterfly_merge_r(
         r, QR_DOMAIN_AXIS,
         lambda stack: _local_r(stack, qr_block=min(32, n)))
 
 
 def _sharded_body(a_dom: Array, *, tile: int, mode: str, use_kernel: bool,
-                  refine: bool):
+                  refine: bool, dispatch_mode):
     """Per-device program: local wavefronts -> R merge (-> thin Q)."""
-    r1 = _merged_r(a_dom, tile, use_kernel)
+    r1 = _merged_r(a_dom, tile, use_kernel, dispatch_mode)
     if mode == "r":
         return r1
     q_dom = triangular_inverse_apply(a_dom, r1)
     if refine:
-        r2 = _merged_r(q_dom, tile, use_kernel)
+        r2 = _merged_r(q_dom, tile, use_kernel, dispatch_mode)
         q_dom = triangular_inverse_apply(q_dom, r2)
         return q_dom, r2 @ r1
     return q_dom, r1
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_fn(d: int, tile: int, mode: str, use_kernel: bool, refine: bool):
+def _sharded_fn(d: int, tile: int, mode: str, use_kernel: bool, refine: bool,
+                dispatch_mode):
     """Compiled shard_map program for one (domain count, tile, mode)."""
     mesh = row_domain_mesh(d)
     in_spec, r_spec, qr_specs = row_domain_specs()
     body = functools.partial(_sharded_body, tile=tile, mode=mode,
-                             use_kernel=use_kernel, refine=refine)
+                             use_kernel=use_kernel, refine=refine,
+                             dispatch_mode=dispatch_mode)
     out_specs = r_spec if mode == "r" else qr_specs
     # pallas_call has no replication rule: the kernel path must skip the
     # check (outputs are still replicated — the merge ends in a pmax).
@@ -145,7 +152,8 @@ def _sharded_fn(d: int, tile: int, mode: str, use_kernel: bool, refine: bool):
 
 def sharded_tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
                      use_kernel: bool = False, ndomains: Optional[int] = None,
-                     refine: bool = True):
+                     refine: bool = True,
+                     dispatch_mode: Optional[str] = None):
     """QR of ``a`` via per-device tiled wavefront domains + R merge tree.
 
     mode: "reduced" -> (Q m x k, R k x n) with k = min(m, n); "r" -> R.
@@ -160,7 +168,10 @@ def sharded_tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
     With one effective domain this IS ``tiled_qr`` — same program, same
     bits.  ``refine`` runs the CQR2 second pass on the thin Q (two merge
     trees total) — keep it on; it is what holds Q orthogonality at
-    ~machine eps independent of the domain count.
+    ~machine eps independent of the domain count.  ``dispatch_mode``
+    picks the engine lowering of each domain-local sweep on the kernel
+    path ("wavefront" / "megakernel" / None = the engine's auto rule on
+    the per-domain grid).
     """
     if mode not in ("reduced", "r"):
         raise ValueError(
@@ -168,7 +179,8 @@ def sharded_tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
     m, n = a.shape
     d = effective_domains(m, n, tile, ndomains)
     if d == 1:
-        return tiled_qr(a, tile=tile, mode=mode, use_kernel=use_kernel)
+        return tiled_qr(a, tile=tile, mode=mode, use_kernel=use_kernel,
+                        dispatch_mode=dispatch_mode)
 
     # Equalize domains: pad tile rows up to d * ceil(p / d).
     p, _ = tile_grid(m, n, tile)
@@ -176,7 +188,8 @@ def sharded_tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
     m_pad = d * p_dom * tile
     a_pad = _pad_rows(a, m_pad)
 
-    fn = _sharded_fn(d, tile, mode, bool(use_kernel), bool(refine))
+    fn = _sharded_fn(d, tile, mode, bool(use_kernel), bool(refine),
+                     dispatch_mode)
     k = min(m, n)
     if mode == "r":
         return fn(a_pad)[:k, :n]
@@ -195,16 +208,33 @@ from repro.core.tilegraph import _solve_tiled, _vmem_tiled  # noqa: E402
 _MAX_DOMAIN_GRID = 64
 
 
-def _resolve_sharded(m: int, n: int, cfg: QRConfig) -> QRConfig:
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _resolve_sharded(m: int, n: int, cfg: QRConfig, *, dtype=None
+                     ) -> QRConfig:
     d = effective_domains(m, n, cfg.block, cfg.ndomains)
     tile = min(cfg.block, m, n)
 
+    def domain_rows_of(t: int) -> int:
+        return _ceil_div(_ceil_div(m, t), d)  # ceil(p / d) tile rows/device
+
     def domain_grid_side(t: int) -> int:
-        p_dom = -(-(-(-m // t)) // d)  # ceil(ceil(m/t) / d) tile rows/device
-        return max(p_dom, -(-n // t))
+        return max(domain_rows_of(t), _ceil_div(n, t))
 
     while domain_grid_side(tile) > _MAX_DOMAIN_GRID and tile < min(m, n):
         tile = min(2 * tile, m, n)
+    if cfg.dispatch_mode is None and cfg.use_kernel:
+        # The engine lowering each domain-local sweep will run: resolve
+        # the auto rule on the per-domain tile grid, not the global one,
+        # at the planned element width.
+        from repro.core import engine
+        from repro.core.tilegraph import _planned_itemsize
+
+        cfg = cfg.replace(dispatch_mode=engine.resolve_dispatch_mode(
+            domain_rows_of(tile), _ceil_div(n, tile), tile,
+            _planned_itemsize(cfg, dtype)))
     if d > 1:
         # Across domains the thin Q is always solve-based (CQR2-refined
         # A R^{-1}, like TSQR) — the merge tree never materializes the
@@ -223,11 +253,13 @@ def _solve_sharded(a: Array, cfg: QRConfig):
         return _solve_tiled(a, cfg)
     if cfg.mode == "r":
         r = sharded_tiled_qr(a, tile=cfg.block, mode="r",
-                             use_kernel=bool(cfg.use_kernel), ndomains=d)
+                             use_kernel=bool(cfg.use_kernel), ndomains=d,
+                             dispatch_mode=cfg.dispatch_mode)
         return sign_fix_r(r) if cfg.sign_fix else r
     q, r = sharded_tiled_qr(a, tile=cfg.block, mode="reduced",
                             use_kernel=bool(cfg.use_kernel), ndomains=d,
-                            refine=cfg.refine)
+                            refine=cfg.refine,
+                            dispatch_mode=cfg.dispatch_mode)
     return sign_fix_qr(q, r) if cfg.sign_fix else (q, r)
 
 

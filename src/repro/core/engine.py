@@ -1,12 +1,37 @@
-"""Wavefront macro-op execution engine — each DAG level is one in-place
-Pallas dispatch over a tile workspace.
+"""Wavefront macro-op execution engine — the levelized tile DAG as one
+in-place Pallas dispatch per level, or ONE per factorization.
 
 :mod:`repro.core.tilegraph` levelizes the tiled-QR task DAG statically;
 this module *executes* that schedule.  It is the software analogue of the
 paper's Reconfigurable Data-path orchestration (§5): every DAG node runs
-as a fused macro operation (:mod:`repro.kernels.macro_ops`), and every
-wavefront's same-kind task batch lowers to a **single** ``pallas_call``
-whose grid enumerates the level's independent tiles.
+as a fused macro operation (:mod:`repro.kernels.macro_ops`).  Two kernel
+lowerings of the same schedule exist, selected by ``dispatch_mode``:
+
+  * ``"wavefront"`` — every wavefront's same-kind task batch lowers to a
+    **single** ``pallas_call`` whose grid enumerates the level's
+    independent tiles (~``levels x kinds`` dispatches per factorization);
+  * ``"megakernel"`` — the whole schedule flattens into one
+    scalar-prefetched **task table** (one ``(kind, k, i, j)`` record per
+    DAG node, wavefront-ordered, NOOP-padded to a rectangular
+    ``(levels, slots)`` grid) and executes as **one** persistent
+    ``pallas_call``: the grid walks the table, each step switches on
+    ``kind`` into the same macro-op bodies, and operand DMA is
+    **double-buffered** — while task t computes, task t+1's tiles are
+    already streaming into the other buffer half (back-to-back macro-op
+    streaming, the paper's RDP §5 in software).  Prefetch never crosses
+    a level boundary (the level barrier that preserves inter-wavefront
+    dependencies), and one-ahead prefetch within a level is value-exact
+    because a task's reads never overlap its predecessor's writes —
+    asserted per adjacent pair at table-build time (the canonical kind
+    order is load-bearing there: it keeps the one same-level same-tile
+    overlap, LARFB's strictly-lower V1 read vs TSQRT's upper-triangle
+    merge of the diagonal tile, read-before-write and region-disjoint).
+    Consecutive tasks reading the same tile reuse the resident copy
+    instead of re-touching HBM.  ``dispatch_mode=None`` resolves automatically: megakernel when
+    the task table fits the scalar-prefetch budget and the
+    double-buffered working set fits VMEM (both read off the
+    ``"macro_ops"`` kernel policy), wavefront otherwise —
+    :func:`resolve_dispatch_mode` / :func:`schedule_stats`.
 
 Execution model (``use_kernel=True``):
 
@@ -55,12 +80,19 @@ from repro.kernels import macro_ops
 Array = jax.Array
 
 __all__ = [
+    "DISPATCH_MODES",
     "FactorState",
     "factor_tiles",
+    "megakernel_task_table",
+    "resolve_dispatch_mode",
+    "schedule_stats",
     "wavefront_task_arrays",
 ]
 
 _KIND_ORDER = ("GEQRT", "LARFB", "TSQRT", "SSRFB")
+
+#: The engine's kernel lowerings of the static schedule (see module doc).
+DISPATCH_MODES = ("wavefront", "megakernel")
 
 
 class FactorState(NamedTuple):
@@ -96,6 +128,191 @@ def wavefront_task_arrays(p: int, q: int
                                    dtype=np.int32)
                     for kind, tasks in by_kind.items()})
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# megakernel task table — the whole schedule as one scalar-prefetch array
+# ---------------------------------------------------------------------------
+#
+# One int32 row per (level, slot) grid cell.  Valid tasks fill each
+# level's leading slots in canonical kind order (then (k, i, j)); the
+# rectangular remainder is NOOP padding.  Besides the task identity the
+# row carries everything the kernel's double-buffered DMA needs decided
+# statically: the ordered operand-tile coordinates, whether the
+# predecessor slot already prefetched this task's operands, whether this
+# slot should prefetch its successor's (never across a level boundary —
+# the inter-wavefront barrier), and per-operand reuse flags (successor
+# reads the same tile the current task holds resident -> VMEM-local copy
+# instead of an HBM fetch).
+
+_KIND_ID = {kind: n for n, kind in enumerate(_KIND_ORDER)}
+_NOOP = len(_KIND_ORDER)
+
+_COL_KIND, _COL_K, _COL_I, _COL_J = 0, 1, 2, 3
+_COL_R0 = 4            # 3 (row, col) operand-tile coords: columns 4..9
+_COL_FETCHED = 10      # operands already streaming (predecessor prefetch)
+_COL_PREFETCH = 11     # this slot prefetches the successor's operands
+_COL_REUSE0 = 12       # per-operand buffer-reuse flags: columns 12..14
+_COL_REUSET = 15       # block-reflector (T) operand reuse flag
+_NCOLS = 16
+
+
+def _task_reads(kind: str, k: int, i: int, j: int) -> List[Tuple[int, int]]:
+    """Ordered workspace tiles a task DMAs in (matches the body args)."""
+    if kind == "GEQRT":
+        return [(k, k)]
+    if kind == "LARFB":
+        return [(k, k), (k, j)]
+    if kind == "TSQRT":
+        return [(k, k), (i, k)]
+    return [(i, k), (k, j), (i, j)]  # SSRFB
+
+
+def _task_writes(kind: str, k: int, i: int, j: int) -> set:
+    """Workspace tiles a task DMAs back out."""
+    if kind == "GEQRT":
+        return {(k, k)}
+    if kind == "LARFB":
+        return {(k, j)}
+    if kind == "TSQRT":
+        return {(k, k), (i, k)}
+    return {(k, j), (i, j)}  # SSRFB
+
+
+def _task_t_source(kind: str, k: int, i: int, j: int):
+    """Identity of the block-reflector (T) operand, or None."""
+    if kind == "LARFB":
+        return ("d_t", k)
+    if kind == "SSRFB":
+        return ("t_t", i, k)
+    return None
+
+
+def task_count(p: int, q: int) -> int:
+    """Closed-form DAG size: step k contributes (p - k)(q - k) tasks."""
+    return sum((p - k) * (q - k) for k in range(min(p, q)))
+
+
+@functools.lru_cache(maxsize=None)
+def megakernel_task_table(p: int, q: int
+                          ) -> Tuple[np.ndarray, int, int]:
+    """The flattened schedule: ``(table, nlevels, nslots)`` with ``table``
+    an int32 ``(nlevels * nslots, 16)`` array, one row per grid cell.
+
+    Builds the prefetch/reuse chains and *verifies* the invariants the
+    one-ahead double buffering relies on: level-wide, no two tasks write
+    the same tile; and per adjacent slot pair, the successor's reads
+    never overlap the current task's writes (so fetching task t+1's
+    operands before task t's write-back is value-exact, not just
+    race-tolerant).  NOTE the second invariant is a property of the
+    canonical ``_KIND_ORDER`` slot ordering, not of levels at large —
+    e.g. LARFB reads the diagonal tile a same-level TSQRT later merges
+    into (disjoint regions, but the same tile); ordering LARFB first
+    keeps every adjacent window clean.  Deepening the prefetch window
+    beyond one task would need a correspondingly wider assert.
+    """
+    levels: List[List[Tuple[str, int, int, int]]] = []
+    for by_kind in wavefront_task_arrays(p, q):
+        rows = [(kind, int(k), int(i), int(j))
+                for kind in _KIND_ORDER
+                for k, i, j in by_kind.get(kind, ())]
+        levels.append(rows)
+    nlevels = len(levels)
+    nslots = max(len(rows) for rows in levels)
+    tab = np.zeros((nlevels * nslots, _NCOLS), np.int32)
+    tab[:, _COL_KIND] = _NOOP
+    for lv, rows in enumerate(levels):
+        writes = [w for task in rows for w in _task_writes(*task)]
+        assert len(writes) == len(set(writes)), "same-level write overlap"
+        for s, task in enumerate(rows):
+            kind, k, i, j = task
+            t = lv * nslots + s
+            tab[t, _COL_KIND] = _KIND_ID[kind]
+            tab[t, _COL_K], tab[t, _COL_I], tab[t, _COL_J] = k, i, j
+            for b, (r, c) in enumerate(_task_reads(*task)):
+                tab[t, _COL_R0 + 2 * b] = r
+                tab[t, _COL_R0 + 2 * b + 1] = c
+        for s in range(len(rows) - 1):
+            cur, nxt = rows[s], rows[s + 1]
+            t = lv * nslots + s
+            cw = _task_writes(*cur)
+            nr = _task_reads(*nxt)
+            # The level-local safety invariant behind one-ahead prefetch.
+            assert not (set(nr) & cw), (cur, nxt)
+            tab[t, _COL_PREFETCH] = 1
+            tab[t + 1, _COL_FETCHED] = 1
+            cr = _task_reads(*cur)
+            for b in range(min(len(cr), len(nr))):
+                if nr[b] == cr[b]:
+                    tab[t + 1, _COL_REUSE0 + b] = 1
+            cts = _task_t_source(*cur)
+            if cts is not None and cts == _task_t_source(*nxt):
+                tab[t + 1, _COL_REUSET] = 1
+    return tab, nlevels, nslots
+
+
+def table_fits(p: int, q: int, budget: int) -> Tuple[bool, int]:
+    """Does the ``(p, q)`` megakernel task table fit ``budget`` bytes?
+    Returns ``(fits, bytes)``.  Checks the closed-form lower bound first
+    so grids whose table cannot fit anyway (the symbolic DAG is
+    O(p q min(p, q)) tasks) are rejected without ever being levelized."""
+    bound = task_count(p, q) * _NCOLS * 4
+    if bound > budget:
+        return False, bound
+    nbytes = int(megakernel_task_table(p, q)[0].nbytes)
+    return nbytes <= budget, nbytes
+
+
+def resolve_dispatch_mode(p: int, q: int, nb: int,
+                          itemsize: int = 4) -> str:
+    """The ``dispatch_mode=None`` auto rule: ``"megakernel"`` when the
+    task table fits the scalar-prefetch budget AND the double-buffered
+    tile working set fits VMEM (both limits carried by the
+    ``"macro_ops"`` kernel policy), ``"wavefront"`` otherwise."""
+    from repro.core.plan import kernel_table_budget, kernel_vmem_budget
+
+    if macro_ops.megakernel_vmem_bytes(nb, itemsize) \
+            > kernel_vmem_budget("macro_ops"):
+        return "wavefront"
+    fits, _ = table_fits(p, q, kernel_table_budget("macro_ops"))
+    return "megakernel" if fits else "wavefront"
+
+
+def schedule_stats(p: int, q: int, nb: int = 32,
+                   itemsize: int = 4) -> Dict[str, object]:
+    """Dispatch counts and table/working-set bytes for both dispatch
+    modes of the ``(p, q)`` schedule — the numbers behind the auto rule
+    and the ``bench_kernel_traffic`` dispatch-reduction row."""
+    batches = wavefront_task_arrays(p, q)
+    table, nlevels, nslots = megakernel_task_table(p, q)
+    ntasks = int((table[:, _COL_KIND] != _NOOP).sum())
+    return dict(
+        p=p, q=q, nb=nb, levels=nlevels, tasks=ntasks,
+        wavefront=dict(
+            dispatches=sum(len(b) for b in batches),
+            vmem_bytes=macro_ops.engine_vmem_bytes(nb, itemsize),
+        ),
+        megakernel=dict(
+            dispatches=1,
+            grid=(nlevels, nslots),
+            table_shape=tuple(table.shape),
+            table_bytes=int(table.nbytes),
+            padded_slots=nlevels * nslots - ntasks,
+            reused_tile_fetches=int(
+                table[:, _COL_REUSE0:_COL_REUSE0 + 3].sum()),
+            reused_t_fetches=int(table[:, _COL_REUSET].sum()),
+            vmem_bytes=macro_ops.megakernel_vmem_bytes(nb, itemsize),
+        ),
+        auto=resolve_dispatch_mode(p, q, nb, itemsize),
+    )
+
+
+def megakernel_reused_reads(p: int, q: int) -> np.ndarray:
+    """Per-level count of operand-tile fetches the megakernel serves from
+    the resident double buffer instead of HBM (traffic-model input)."""
+    table, nlevels, nslots = megakernel_task_table(p, q)
+    per_slot = table[:, _COL_REUSE0:_COL_REUSE0 + 3].sum(axis=1)
+    return per_slot.reshape(nlevels, nslots).sum(axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -316,11 +533,191 @@ def _pallas_wavefront(state: FactorState, by_kind: Dict[str, np.ndarray],
 
 
 # ---------------------------------------------------------------------------
+# Pallas lowering — megakernel: ONE pallas_call for the whole schedule
+# ---------------------------------------------------------------------------
+#
+# The grid is (levels, slots): the sequential walk over the task table.
+# Each step reads its row, switches on kind into the same value-level
+# macro-op bodies the wavefront lowering uses, and moves tiles by
+# explicit DMA against the ANY-space workspace.  Operand fetch is
+# double-buffered on the flat task parity: while task t computes out of
+# buffer half t%2, it has already started task t+1's fetches into the
+# other half (or a VMEM-local copy when t+1 re-reads a tile t holds
+# resident).  Start and wait reconstruct their copy descriptors from the
+# same table row, so semaphore pairing is static.  Prefetch stops at
+# level boundaries: the first slot of each level fetches synchronously,
+# after every prior write-back has completed — the wavefront barrier.
+
+def _op_copies(tab_ref, t, phase, ws, d_t, t_t, opbuf, tbuf, sems,
+               start: bool):
+    """Start (or wait for) the operand DMAs of task-table row ``t`` into
+    buffer half ``phase``.  ``start`` is trace-time: the wait side
+    rebuilds the identical descriptors, so each semaphore is started
+    exactly once per wait."""
+    kind = tab_ref[t, _COL_KIND]
+
+    def go(cp):
+        cp.start() if start else cp.wait()
+
+    def tile_fetch(b):
+        r = tab_ref[t, _COL_R0 + 2 * b]
+        c = tab_ref[t, _COL_R0 + 2 * b + 1]
+        reuse = tab_ref[t, _COL_REUSE0 + b]
+
+        @pl.when(reuse == 1)
+        def _():
+            go(pltpu.make_async_copy(opbuf.at[1 - phase, b],
+                                     opbuf.at[phase, b], sems.at[phase, b]))
+
+        @pl.when(reuse == 0)
+        def _():
+            go(pltpu.make_async_copy(ws.at[r, c], opbuf.at[phase, b],
+                                     sems.at[phase, b]))
+
+    tile_fetch(0)  # every kind reads at least one tile
+
+    @pl.when(kind != _KIND_ID["GEQRT"])
+    def _():
+        tile_fetch(1)
+
+    @pl.when(kind == _KIND_ID["SSRFB"])
+    def _():
+        tile_fetch(2)
+
+    def t_fetch(src):
+        reuse = tab_ref[t, _COL_REUSET]
+
+        @pl.when(reuse == 1)
+        def _():
+            go(pltpu.make_async_copy(tbuf.at[1 - phase], tbuf.at[phase],
+                                     sems.at[phase, 3]))
+
+        @pl.when(reuse == 0)
+        def _():
+            go(pltpu.make_async_copy(src, tbuf.at[phase], sems.at[phase, 3]))
+
+    @pl.when(kind == _KIND_ID["LARFB"])
+    def _():
+        t_fetch(d_t.at[tab_ref[t, _COL_K]])
+
+    @pl.when(kind == _KIND_ID["SSRFB"])
+    def _():
+        t_fetch(t_t.at[tab_ref[t, _COL_I], tab_ref[t, _COL_K]])
+
+
+def _sync_put(src, dst, sem):
+    cp = pltpu.make_async_copy(src, dst, sem)
+    cp.start()
+    cp.wait()
+
+
+def megakernel_kernel(tab_ref, ws_in, dt_in, dtaus_in, tt_in, ttaus_in,
+                      ws, d_t, d_taus, t_t, t_taus,
+                      opbuf, tbuf, outbuf, taubuf, sems, wbsem):
+    """One task-table slot per grid cell; the whole schedule is one call."""
+    del ws_in, dt_in, dtaus_in, tt_in, ttaus_in  # aliased in place
+    lvl = pl.program_id(0)
+    slot = pl.program_id(1)
+    t = lvl * pl.num_programs(1) + slot
+    phase = jax.lax.rem(t, 2)
+    kind = tab_ref[t, _COL_KIND]
+    k = tab_ref[t, _COL_K]
+    i = tab_ref[t, _COL_I]
+    j = tab_ref[t, _COL_J]
+    valid = kind != _NOOP
+
+    # -- operands: self-fetch at level heads, else already in flight ----
+    @pl.when(valid & (tab_ref[t, _COL_FETCHED] == 0))
+    def _():
+        _op_copies(tab_ref, t, phase, ws, d_t, t_t, opbuf, tbuf, sems,
+                   start=True)
+
+    @pl.when(valid)
+    def _():
+        _op_copies(tab_ref, t, phase, ws, d_t, t_t, opbuf, tbuf, sems,
+                   start=False)
+
+    # -- double buffering: start the successor's fetches before compute -
+    @pl.when(tab_ref[t, _COL_PREFETCH] == 1)
+    def _():
+        _op_copies(tab_ref, t + 1, 1 - phase, ws, d_t, t_t, opbuf, tbuf,
+                   sems, start=True)
+
+    # -- compute: switch on kind into the shared macro-op bodies --------
+    @pl.when(kind == _KIND_ID["GEQRT"])
+    def _():
+        packed, tmat, taus = macro_ops.geqrt_body(opbuf[phase, 0])
+        outbuf[0] = packed
+        outbuf[1] = tmat
+        taubuf[...] = taus
+        _sync_put(outbuf.at[0], ws.at[k, k], wbsem)
+        _sync_put(outbuf.at[1], d_t.at[k], wbsem)
+        _sync_put(taubuf, d_taus.at[k], wbsem)
+
+    @pl.when(kind == _KIND_ID["LARFB"])
+    def _():
+        outbuf[0] = macro_ops.larfb_body(opbuf[phase, 0], tbuf[phase],
+                                         opbuf[phase, 1])
+        _sync_put(outbuf.at[0], ws.at[k, j], wbsem)
+
+    @pl.when(kind == _KIND_ID["TSQRT"])
+    def _():
+        merged, v2, tmat, taus = macro_ops.tsqrt_body(opbuf[phase, 0],
+                                                      opbuf[phase, 1])
+        outbuf[0] = merged
+        outbuf[1] = v2
+        outbuf[2] = tmat
+        taubuf[...] = taus
+        _sync_put(outbuf.at[0], ws.at[k, k], wbsem)
+        _sync_put(outbuf.at[1], ws.at[i, k], wbsem)
+        _sync_put(outbuf.at[2], t_t.at[i, k], wbsem)
+        _sync_put(taubuf, t_taus.at[i, k], wbsem)
+
+    @pl.when(kind == _KIND_ID["SSRFB"])
+    def _():
+        ck, ci = macro_ops.ssrfb_body(opbuf[phase, 0], tbuf[phase],
+                                      opbuf[phase, 1], opbuf[phase, 2])
+        outbuf[0] = ck
+        outbuf[1] = ci
+        _sync_put(outbuf.at[0], ws.at[k, j], wbsem)
+        _sync_put(outbuf.at[1], ws.at[i, j], wbsem)
+
+
+def _dispatch_megakernel(state: FactorState, p: int, q: int, nb: int,
+                         interpret: bool) -> FactorState:
+    table_np, nlevels, nslots = megakernel_task_table(p, q)
+    dt = state.tiles.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nlevels, nslots),
+        in_specs=[_any_spec()] * 5,
+        out_specs=[_any_spec()] * 5,
+        scratch_shapes=[
+            pltpu.VMEM((2, 3, nb, nb), dt),   # double-buffered operand tiles
+            pltpu.VMEM((2, nb, nb), dt),      # double-buffered T operand
+            pltpu.VMEM((3, nb, nb), dt),      # write-back staging
+            pltpu.VMEM((nb,), dt),            # taus staging
+            pltpu.SemaphoreType.DMA((2, 4)),  # per (phase, operand) fetch
+            pltpu.SemaphoreType.DMA,          # synchronous write-back
+        ],
+    )
+    outs = pl.pallas_call(
+        megakernel_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype) for x in state],
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4},
+        interpret=interpret,
+    )(jnp.asarray(table_np), *state)
+    return FactorState(*outs)
+
+
+# ---------------------------------------------------------------------------
 # the factor loop
 # ---------------------------------------------------------------------------
 
 def _factor_impl(tiles: Array, p: int, q: int, nb: int, use_kernel: bool,
-                 interpret: bool) -> FactorState:
+                 interpret: bool, dispatch_mode: str = "wavefront"
+                 ) -> FactorState:
     r = min(p, q)
     dt = tiles.dtype
     state = FactorState(
@@ -330,6 +727,8 @@ def _factor_impl(tiles: Array, p: int, q: int, nb: int, use_kernel: bool,
         jnp.zeros((p, r, nb, nb), dt),
         jnp.zeros((p, r, nb), dt),
     )
+    if use_kernel and dispatch_mode == "megakernel":
+        return _dispatch_megakernel(state, p, q, nb, interpret)
     step = (functools.partial(_pallas_wavefront, nb=nb, interpret=interpret)
             if use_kernel else _jnp_wavefront)
     for by_kind in wavefront_task_arrays(p, q):
@@ -337,37 +736,67 @@ def _factor_impl(tiles: Array, p: int, q: int, nb: int, use_kernel: bool,
     return state
 
 
-_factor_jit = jax.jit(_factor_impl, static_argnums=(1, 2, 3, 4, 5),
+_factor_jit = jax.jit(_factor_impl, static_argnums=(1, 2, 3, 4, 5, 6),
                       donate_argnums=(0,))
 
 
 def factor_tiles(tiles: Array, *, p: int, q: int, nb: int,
                  use_kernel: bool = False,
-                 interpret: Optional[bool] = None) -> FactorState:
+                 interpret: Optional[bool] = None,
+                 dispatch_mode: Optional[str] = None) -> FactorState:
     """Run the full wavefront schedule over a ``(p, q, nb, nb)`` workspace.
 
     The workspace argument is **donated** — the engine factors in place
     and the caller's buffer is consumed (pass ``tiles.copy()`` to keep
-    it).  ``use_kernel=True`` dispatches each (wavefront, kind) batch as
-    one Pallas macro-op call (``interpret=None`` resolves via the
-    ``macro_ops`` kernel policy: compiled on TPU, interpret elsewhere);
-    ``use_kernel=False`` runs the bitwise-identical jnp oracle lowering.
+    it).  ``use_kernel=True`` runs the Pallas lowering selected by
+    ``dispatch_mode`` — ``"wavefront"`` (one in-place macro-op call per
+    (wavefront, kind) batch), ``"megakernel"`` (the whole schedule as ONE
+    persistent call over the scalar-prefetched task table with
+    double-buffered tile DMA), or ``None`` for the budget-driven auto
+    rule (:func:`resolve_dispatch_mode`).  ``interpret=None`` resolves
+    via the ``macro_ops`` kernel policy: compiled on TPU, interpret
+    elsewhere.  ``use_kernel=False`` runs the bitwise-identical jnp
+    oracle lowering of the same schedule (``dispatch_mode`` is then
+    irrelevant — there is no kernel to dispatch).
     """
     if tiles.ndim != 4 or tiles.shape[:2] != (p, q) \
             or tiles.shape[2:] != (nb, nb):
         raise ValueError(
             f"expected a ({p}, {q}, {nb}, {nb}) tile workspace, "
             f"got {tiles.shape}")
+    if dispatch_mode not in (None,) + DISPATCH_MODES:
+        raise ValueError(
+            f"unknown dispatch_mode {dispatch_mode!r}; expected one of "
+            f"{DISPATCH_MODES} or None (auto)")
+    mode = "wavefront"
     if use_kernel:
-        from repro.core.plan import kernel_vmem_budget
+        from repro.core.plan import kernel_table_budget, kernel_vmem_budget
 
         itemsize = jnp.dtype(tiles.dtype).itemsize
-        need = macro_ops.engine_vmem_bytes(nb, itemsize)
+        mode = (resolve_dispatch_mode(p, q, nb, itemsize)
+                if dispatch_mode is None else dispatch_mode)
+        need = (macro_ops.megakernel_vmem_bytes(nb, itemsize)
+                if mode == "megakernel"
+                else macro_ops.engine_vmem_bytes(nb, itemsize))
         budget = kernel_vmem_budget("macro_ops")
         if need > budget:
             raise ValueError(
-                f"tile ({nb},{nb}) exceeds VMEM budget "
+                f"tile ({nb},{nb}) exceeds the {mode} VMEM budget "
                 f"({need} > {budget}); shrink the tile")
+        if mode == "megakernel":
+            # The scalar-prefetch side of the same contract: a forced
+            # megakernel must also fit its task table (auto never picks
+            # it past the budget, and an oversized table would only fail
+            # opaquely at Mosaic compile time).
+            tbudget = kernel_table_budget("macro_ops")
+            fits, tbytes = table_fits(p, q, tbudget)
+            if not fits:
+                raise ValueError(
+                    f"({p}, {q}) grid's megakernel task table "
+                    f"(>= {tbytes} bytes) exceeds the scalar-prefetch "
+                    f"budget ({tbudget}); grow the tile or use "
+                    f"dispatch_mode='wavefront'")
     if interpret is None:
         interpret = macro_ops.default_interpret()
-    return _factor_jit(tiles, p, q, nb, bool(use_kernel), bool(interpret))
+    return _factor_jit(tiles, p, q, nb, bool(use_kernel), bool(interpret),
+                       mode)

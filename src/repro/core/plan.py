@@ -38,11 +38,16 @@ same-kind task batch is a **single in-place Pallas dispatch** over a
 :mod:`repro.kernels.macro_ops` library; interpret mode off-TPU), and
 with ``use_kernel=False`` the bitwise-identical vmapped jnp oracle of
 the same bodies — cross-panel parallelism the blocked methods serialize
-away either way.  ``QRConfig.block`` doubles as the tile size; the
-``method="auto"`` heuristic routes large near-square matrices (dims in
-[256, 2048], aspect < 4 — the upper bound keeps the symbolic DAG small
-at the default tile) there.  The engine's VMEM accounting is the
-``"macro_ops"`` kernel policy.
+away either way.  On the kernel path ``QRConfig.dispatch_mode`` selects
+the engine lowering: ``"wavefront"`` (per-level dispatches) or
+``"megakernel"`` (the whole schedule as ONE persistent Pallas call over
+a scalar-prefetched task table with double-buffered tile DMA); ``None``
+lets the planner pick megakernel whenever the table and the working set
+fit the ``"macro_ops"`` policy budgets.  ``QRConfig.block`` doubles as
+the tile size; the ``method="auto"`` heuristic routes large near-square
+matrices (dims in [256, 2048], aspect < 4 — the upper bound keeps the
+symbolic DAG small at the default tile) there.  The engine's VMEM and
+task-table accounting is the ``"macro_ops"`` kernel policy.
 
 Sharded tiled QR (multi-device)
 -------------------------------
@@ -93,7 +98,9 @@ __all__ = [
     "get_method",
     "available_methods",
     "kernel_vmem_budget",
+    "kernel_table_budget",
     "DEFAULT_VMEM_BUDGET",
+    "DEFAULT_TABLE_BUDGET",
     "sign_fix_qr",
     "sign_fix_r",
 ]
@@ -106,6 +113,11 @@ _Q_METHODS = ("formq", "solve")
 # planner's fits-in-VMEM checks and the kernel wrappers' runtime guards
 # cannot drift apart.
 DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+# Scalar-prefetch (SMEM) budget for persistent task tables — the limit
+# the engine's megakernel dispatch mode must fit its flattened schedule
+# into (a 16x16 tile grid's table is ~200 KiB; SMEM is ~1 MiB/core).
+DEFAULT_TABLE_BUDGET = 512 * 1024
 
 # Matrices at least this large on their short side (and near-square, see
 # select_method) route to the tiled task-graph backend under "auto".  The
@@ -152,6 +164,16 @@ class QRConfig:
                 to a power of two and caps at the available device count
                 and the tile-row count; ``ndomains=1`` is exactly the
                 single-device tiled backend.
+    dispatch_mode: kernel lowering of the wavefront engine's schedule
+                (tiled / sharded_tiled on their kernel paths) —
+                "wavefront" (one in-place Pallas dispatch per DAG
+                level), "megakernel" (the whole schedule as ONE
+                persistent Pallas call over a scalar-prefetched task
+                table with double-buffered tile DMA), or None => the
+                planner resolves it (megakernel when the task table and
+                the double-buffered working set fit the "macro_ops"
+                policy budgets, wavefront otherwise).  Both lowerings
+                are bitwise-identical to the jnp oracle.
     """
 
     method: str = "auto"
@@ -164,10 +186,15 @@ class QRConfig:
     q_method: str = "formq"
     refine: bool = True
     ndomains: Optional[int] = None
+    dispatch_mode: Optional[str] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(f"unknown mode {self.mode!r}; expected one of {_MODES}")
+        if self.dispatch_mode not in (None, "wavefront", "megakernel"):
+            raise ValueError(
+                f"unknown dispatch_mode {self.dispatch_mode!r}; expected "
+                "'wavefront', 'megakernel', or None (auto)")
         if self.q_method not in _Q_METHODS:
             raise ValueError(
                 f"unknown q_method {self.q_method!r}; expected one of {_Q_METHODS}")
@@ -190,8 +217,10 @@ class MethodSpec:
              None when the method has no packed form (e.g. TSQR).
     solve:   ``(a, cfg) -> (q, r) | r`` honoring cfg.mode/sign_fix; when
              None the planner derives it from ``factor``.
-    resolve: optional ``(m, n, cfg) -> cfg`` hook filling method-specific
-             fields (TSQR uses it to pick ``nblocks``).
+    resolve: optional ``(m, n, cfg, *, dtype) -> cfg`` hook filling
+             method-specific fields (TSQR uses it to pick ``nblocks``;
+             the tiled backends use ``dtype`` — the planned element
+             width — to resolve the engine dispatch mode).
     vmem_bytes: optional ``(m, n, cfg) -> bytes`` working-set estimator
              used by the kernel dispatch policy.
     kernel_policy: name of the :class:`KernelPolicy` whose budget gates
@@ -214,12 +243,17 @@ class MethodSpec:
 
 @dataclasses.dataclass(frozen=True)
 class KernelPolicy:
-    """Dispatch policy registered by a kernel backend (kernels.ops)."""
+    """Dispatch policy registered by a kernel backend (kernels.ops).
+
+    table_budget: scalar-prefetch (SMEM) bytes available for persistent
+    task tables; 0 means the backend has no megakernel-style lowering.
+    """
 
     name: str
     vmem_bytes: Callable  # (m, b) -> working-set bytes
     vmem_budget: int
     default_interpret: Optional[Callable] = None  # () -> bool
+    table_budget: int = 0
 
 
 _REGISTRY: Dict[str, MethodSpec] = {}
@@ -286,6 +320,14 @@ def kernel_vmem_budget(policy: str = "mht_panel") -> int:
     :class:`KernelPolicy`), falling back to :data:`DEFAULT_VMEM_BUDGET`."""
     pol = _KERNEL_POLICIES.get(policy)
     return pol.vmem_budget if pol is not None else DEFAULT_VMEM_BUDGET
+
+
+def kernel_table_budget(policy: str) -> int:
+    """Scalar-prefetch task-table budget of the named kernel policy —
+    what the engine's ``dispatch_mode=None`` auto rule checks the
+    flattened megakernel schedule against (0: no megakernel lowering)."""
+    pol = _KERNEL_POLICIES.get(policy)
+    return pol.table_budget if pol is not None else 0
 
 
 # ---------------------------------------------------------------------------
@@ -416,7 +458,7 @@ def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
 
     resolved = dataclasses.replace(cfg, method=name, use_kernel=bool(use_kernel))
     if spec.resolve is not None:
-        resolved = spec.resolve(m, n, resolved)
+        resolved = spec.resolve(m, n, resolved, dtype=np.dtype(dtype))
     return QRSolver(shape=(m, n), dtype=np.dtype(dtype), config=resolved,
                     spec=spec)
 

@@ -286,15 +286,19 @@ def _form_q_tiled(f: TiledFactors, ncols: int) -> Array:
     return e
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "mode", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("tile", "mode", "use_kernel",
+                                             "dispatch_mode"))
 def tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
-             use_kernel: bool = False):
+             use_kernel: bool = False, dispatch_mode: str = None):
     """QR of ``a`` via the tiled task-graph runtime.
 
-    ``use_kernel=True`` executes each wavefront through the macro-op
-    engine's in-place Pallas dispatch (:func:`repro.core.engine.
-    factor_tiles`; interpret mode off-TPU); ``use_kernel=False`` runs the
-    bitwise-identical pure-jnp oracle lowering of the same schedule.
+    ``use_kernel=True`` executes the schedule through the macro-op
+    engine's Pallas lowering (:func:`repro.core.engine.factor_tiles`;
+    interpret mode off-TPU) selected by ``dispatch_mode`` — per-level
+    ``"wavefront"`` dispatches, the single-call ``"megakernel"``, or
+    ``None`` for the engine's budget-driven auto rule; ``use_kernel=
+    False`` runs the bitwise-identical pure-jnp oracle lowering of the
+    same schedule.
 
     Non-multiple-of-tile shapes are zero-padded: padded rows/columns
     yield exactly-zero reflector entries (degenerate ``tau = 0`` columns),
@@ -314,7 +318,8 @@ def tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
     a_pad = jnp.pad(a, pad) if (pad[0][1] or pad[1][1]) else a
 
     f = engine.factor_tiles(_split_tiles(a_pad, p, q, nb),
-                            p=p, q=q, nb=nb, use_kernel=use_kernel)
+                            p=p, q=q, nb=nb, use_kernel=use_kernel,
+                            dispatch_mode=dispatch_mode)
     k = min(m, n)
     r_full = jnp.triu(_join_tiles(f.tiles))
     if mode == "r":
@@ -333,33 +338,64 @@ from repro.core.plan import (  # noqa: E402
     MethodSpec, QRConfig, register_method, sign_fix_qr, sign_fix_r)
 
 
-def _resolve_tiled(m: int, n: int, cfg: QRConfig) -> QRConfig:
+def _planned_itemsize(cfg, dtype) -> int:
+    """Element width of the compute dtype the solve will actually run
+    (the ``precision`` override wins over the input dtype)."""
+    import numpy as np
+
+    if cfg.precision is not None:
+        return np.dtype(cfg.precision).itemsize
+    return np.dtype(dtype).itemsize if dtype is not None else 4
+
+
+def _resolve_tiled(m: int, n: int, cfg: QRConfig, *, dtype=None) -> QRConfig:
     # cfg.block doubles as the tile size; never exceed the matrix itself.
-    return cfg.replace(block=min(cfg.block, m, n))
+    cfg = cfg.replace(block=min(cfg.block, m, n))
+    if cfg.dispatch_mode is None and cfg.use_kernel:
+        # Record the engine lowering the kernel path will actually run
+        # (megakernel iff the task table + working set fit the budgets
+        # at the planned element width — fp64 doubles the working set);
+        # the jnp-oracle path has no kernel dispatch — mode stays None.
+        p, q = tile_grid(m, n, cfg.block)
+        cfg = cfg.replace(dispatch_mode=engine.resolve_dispatch_mode(
+            p, q, cfg.block, _planned_itemsize(cfg, dtype)))
+    return cfg
 
 
 def _solve_tiled(a: Array, cfg: QRConfig):
     m, n = a.shape
     tile = cfg.block  # capped at min(m, n) by the _resolve_tiled hook
     if cfg.mode == "r":
-        r = tiled_qr(a, tile=tile, mode="r", use_kernel=bool(cfg.use_kernel))
+        r = tiled_qr(a, tile=tile, mode="r", use_kernel=bool(cfg.use_kernel),
+                     dispatch_mode=cfg.dispatch_mode)
         return sign_fix_r(r) if cfg.sign_fix else r
     if cfg.mode == "reduced" and cfg.q_method == "solve" and m >= n:
         from repro.core.tsqr import triangular_inverse_apply
 
-        r = tiled_qr(a, tile=tile, mode="r", use_kernel=bool(cfg.use_kernel))
+        r = tiled_qr(a, tile=tile, mode="r", use_kernel=bool(cfg.use_kernel),
+                     dispatch_mode=cfg.dispatch_mode)
         q = triangular_inverse_apply(a, r[:n, :n])
     else:
         q, r = tiled_qr(a, tile=tile, mode=cfg.mode,
-                        use_kernel=bool(cfg.use_kernel))
+                        use_kernel=bool(cfg.use_kernel),
+                        dispatch_mode=cfg.dispatch_mode)
     return sign_fix_qr(q, r) if cfg.sign_fix else (q, r)
 
 
 def _vmem_tiled(m: int, n: int, cfg: QRConfig) -> int:
-    """Largest per-task working set on the engine's kernel path."""
+    """Smallest working set the kernel path can run in (fp32 units — the
+    caller scales by element width).  With ``dispatch_mode`` unset or
+    "wavefront" that is the per-level wavefront set: the megakernel's
+    larger double-buffered set is only ever auto-picked when it *also*
+    fits (at the planned width, see ``_resolve_tiled``), so pricing it
+    here would wrongly reject shapes the wavefront mode handles.  Only a
+    forced megakernel must be gated on its own footprint."""
     from repro.kernels import macro_ops
 
-    return macro_ops.engine_vmem_bytes(min(cfg.block, m, n))
+    nb = min(cfg.block, m, n)
+    if cfg.dispatch_mode == "megakernel":
+        return macro_ops.megakernel_vmem_bytes(nb)
+    return macro_ops.engine_vmem_bytes(nb)
 
 
 register_method(MethodSpec(

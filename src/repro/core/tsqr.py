@@ -200,7 +200,8 @@ def default_nblocks(m: int, n: int) -> int:
     return max(nb, 1)
 
 
-def _resolve_tsqr(m: int, n: int, cfg: QRConfig) -> QRConfig:
+def _resolve_tsqr(m: int, n: int, cfg: QRConfig, *, dtype=None) -> QRConfig:
+    del dtype  # tree shape is element-width independent
     nb = cfg.nblocks if cfg.nblocks is not None else default_nblocks(m, n)
     if m % nb != 0:
         raise ValueError(f"m={m} not divisible by nblocks={nb}")

@@ -51,8 +51,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.blocked import larft, unpack_v_panel
-from repro.core.plan import (DEFAULT_VMEM_BUDGET, KernelPolicy,
-                             register_kernel_policy)
+from repro.core.plan import (DEFAULT_TABLE_BUDGET, DEFAULT_VMEM_BUDGET,
+                             KernelPolicy, register_kernel_policy)
 
 Array = jax.Array
 
@@ -76,6 +76,8 @@ __all__ = [
     "ssrfb_wavefront_kernel",
     "vmem_bytes",
     "engine_vmem_bytes",
+    "megakernel_vmem_bytes",
+    "MEGAKERNEL_VMEM_TILES",
 ]
 
 
@@ -397,9 +399,23 @@ def engine_vmem_bytes(nb: int, itemsize: int = 4) -> int:
     return max(vmem_bytes(k, nb, itemsize) for k in MACRO_OPS)
 
 
+# The megakernel dispatch mode holds, per grid step: two phases of the
+# worst-case operand set (3 tiles + 1 block reflector, double-buffered
+# so task t+1's fetch overlaps task t's compute), the write-back staging
+# tiles, and the worst-case body temporaries (SSRFB's 4-product chain).
+MEGAKERNEL_VMEM_TILES = 2 * (3 + 1) + 3 + 4
+
+
+def megakernel_vmem_bytes(nb: int, itemsize: int = 4) -> int:
+    """Resident working set of the engine's single-dispatch megakernel
+    lowering at tile size nb (double-buffered operands + staging)."""
+    return MEGAKERNEL_VMEM_TILES * nb * nb * itemsize
+
+
 _POLICY = register_kernel_policy(KernelPolicy(
     name="macro_ops",
     vmem_bytes=lambda nb, _b=0: engine_vmem_bytes(nb),
     vmem_budget=DEFAULT_VMEM_BUDGET,
     default_interpret=default_interpret,
+    table_budget=DEFAULT_TABLE_BUDGET,
 ))

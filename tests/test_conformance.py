@@ -182,27 +182,32 @@ def test_kernel_path_conformance(method, matrices):
     _assert_conformance(a, q, r, _tol("float32", 64, 32))
 
 
+@pytest.mark.parametrize("dispatch_mode", ["wavefront", "megakernel"])
 @pytest.mark.parametrize("method", METHODS)
-def test_engine_path_bitwise_vs_oracle(method, matrices):
+def test_engine_path_bitwise_vs_oracle(method, dispatch_mode, matrices):
     """Every registry method executing through the wavefront macro-op
     engine (kernel_policy == "macro_ops" — today `tiled` and
     `sharded_tiled`, plus any future engine-backed backend for free)
-    must produce BITWISE-identical (Q, R) on its kernel path
-    (one in-place Pallas dispatch per DAG level, interpret mode on CPU)
-    and its ``use_kernel=False`` jnp-oracle lowering.  Not a tolerance —
+    must produce BITWISE-identical (Q, R) on BOTH kernel dispatch modes
+    (per-level wavefront dispatches AND the single-call megakernel over
+    the scalar-prefetched task table; interpret mode on CPU) and its
+    ``use_kernel=False`` jnp-oracle lowering.  Not a tolerance —
     equality."""
     if get_method(method).kernel_policy != "macro_ops":
         pytest.skip("capability: method does not execute through "
                     "repro.core.engine")
     a = matrices.well_conditioned(48, 32, cond=100.0)
     sk = _plan_or_skip(a.shape, a.dtype,
-                       QRConfig(method=method, block=BLOCK, use_kernel=True))
+                       QRConfig(method=method, block=BLOCK, use_kernel=True,
+                                dispatch_mode=dispatch_mode))
     sj = _plan_or_skip(a.shape, a.dtype,
                        QRConfig(method=method, block=BLOCK, use_kernel=False))
     qk, rk = sk.solve(a)
     qj, rj = sj.solve(a)
-    assert bool((qk == qj).all()), "engine Q != oracle Q (bitwise)"
-    assert bool((rk == rj).all()), "engine R != oracle R (bitwise)"
+    assert bool((qk == qj).all()), \
+        f"{dispatch_mode} engine Q != oracle Q (bitwise)"
+    assert bool((rk == rj).all()), \
+        f"{dispatch_mode} engine R != oracle R (bitwise)"
 
 
 def test_registry_has_all_expected_methods():

@@ -238,6 +238,32 @@ _EDGE_SCRIPT = _SUBPROCESS_PRELUDE + textwrap.dedent(
 )
 
 
+_MEGAKERNEL_SCRIPT = _SUBPROCESS_PRELUDE + textwrap.dedent(
+    """
+    # The engine's dispatch modes inside shard_map: with d > 1 every
+    # device runs its domain-local sweep through the requested lowering
+    # (wavefront = per-level dispatches, megakernel = ONE persistent
+    # dispatch per domain sweep) — and the two kernel paths stay bitwise
+    # identical to each other and to the jnp-oracle lowering.
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    d = effective_domains(128, 64, 16)
+    assert d == 8, d
+    outs = {}
+    for mode in (None, "wavefront", "megakernel"):
+        use_kernel = mode is not None
+        q, r = sharded_tiled_qr(a, tile=16, use_kernel=use_kernel,
+                                dispatch_mode=mode)
+        check(a, q, r)
+        outs[mode] = (np.asarray(q), np.asarray(r))
+    for mode in ("wavefront", "megakernel"):
+        assert (outs[mode][0] == outs[None][0]).all(), mode
+        assert (outs[mode][1] == outs[None][1]).all(), mode
+    print("SHARDED_MEGAKERNEL_OK")
+    """
+)
+
+
 def _run_sub(script, timeout=600):
     return subprocess.run(
         [sys.executable, "-c", script],
@@ -265,3 +291,11 @@ def test_sharded_tiled_edge_cases_subprocess():
     """Small grids, uneven splits, d=1 bitwise, sign_fix — on 8 devices."""
     res = _run_sub(_EDGE_SCRIPT)
     assert "SHARDED_EDGES_OK" in res.stdout, res.stderr[-3000:]
+
+
+@pytest.mark.slow
+def test_sharded_dispatch_modes_subprocess():
+    """Both engine dispatch modes run domain-locally under shard_map
+    (d=8) and stay bitwise equal to the jnp-oracle lowering."""
+    res = _run_sub(_MEGAKERNEL_SCRIPT)
+    assert "SHARDED_MEGAKERNEL_OK" in res.stdout, res.stderr[-3000:]

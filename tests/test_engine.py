@@ -1,21 +1,28 @@
 """Wavefront macro-op engine tests (repro.core.engine).
 
-The engine's contract is *bitwise* equivalence between its two
-lowerings of the static wavefront schedule:
+The engine's contract is *bitwise* equivalence between its lowerings of
+the static wavefront schedule:
 
-  * ``use_kernel=True``  — one in-place Pallas dispatch per
-    (wavefront, kind) task batch over the tile workspace (interpret
-    mode on CPU);
+  * ``use_kernel=True, dispatch_mode="wavefront"`` — one in-place Pallas
+    dispatch per (wavefront, kind) task batch over the tile workspace
+    (interpret mode on CPU);
+  * ``use_kernel=True, dispatch_mode="megakernel"`` — the whole schedule
+    as ONE persistent pallas_call walking a scalar-prefetched task table
+    with double-buffered tile DMA;
   * ``use_kernel=False`` — the vmapped pure-jnp oracle of the same
     macro-op bodies.
 
 Covered here: per-(wavefront, kind) dispatch vs the jnp lowering from
 identical pre-state (the per-macro-op bitwise property), end-to-end
-``factor_tiles`` / ``tiled_qr`` bitwise equality, macro-op bodies vs the
+``factor_tiles`` / ``tiled_qr`` bitwise equality per dispatch mode, the
+megakernel task-table census / prefetch-safety invariants / one-dispatch
+lowering assertion / budget-driven auto fallback, macro-op bodies vs the
 independent ``kernels/ref`` oracles, the schedule batch census, the
 workspace-donation contract, and the VMEM/shape guards.  The
 registry-wide engine hook lives in tests/test_conformance.py.
 """
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -116,6 +123,234 @@ def test_tiled_qr_engine_bitwise(m, n):
     assert bool((qk == qj).all()) and bool((rk == rj).all())
 
 
+# -------------------------------------------------- megakernel dispatch
+
+@pytest.mark.parametrize("p,q", [(1, 1), (3, 3), (5, 2), (2, 4), (4, 4)])
+def test_megakernel_table_census(p, q):
+    """Every levelized DAG task appears exactly once in the flattened
+    task table, slots are level-grouped with NOOP padding only as a
+    level suffix, and the census matches the wavefront batches."""
+    table, nlevels, nslots = engine.megakernel_task_table(p, q)
+    levels = wavefronts(p, q)
+    assert nlevels == len(levels)
+    assert table.shape == (nlevels * nslots, engine._NCOLS)
+    kind_names = dict(enumerate(engine._KIND_ORDER))
+    seen = []
+    for lv in range(nlevels):
+        rows = table[lv * nslots:(lv + 1) * nslots]
+        kinds = rows[:, engine._COL_KIND]
+        valid = kinds != engine._NOOP
+        # NOOP padding is a suffix: valid slots are contiguous from 0
+        assert bool((~valid[int(valid.sum()):]).all())
+        got = {(kind_names[int(kd)], int(k), int(i), int(j))
+               for kd, k, i, j in rows[valid][:, :4]}
+        want = {(t.kind, t.k, t.i, t.j) for t in levels[lv]}
+        assert got == want
+        seen.extend(got)
+    assert len(seen) == len(set(seen)) == engine.task_count(p, q)
+
+
+@pytest.mark.parametrize("p,q", [(4, 4), (6, 3), (3, 6)])
+def test_megakernel_table_prefetch_invariants(p, q):
+    """The static flags behind the double buffering: prefetch never
+    crosses a level boundary (the wavefront barrier), FETCHED mirrors the
+    predecessor's PREFETCH, and every reuse flag marks a genuine repeat
+    read of a tile the current task does not write."""
+    table, nlevels, nslots = engine.megakernel_task_table(p, q)
+    kind_names = dict(enumerate(engine._KIND_ORDER))
+
+    def task(row):
+        return (kind_names[int(row[engine._COL_KIND])],
+                int(row[engine._COL_K]), int(row[engine._COL_I]),
+                int(row[engine._COL_J]))
+
+    for t in range(table.shape[0]):
+        row = table[t]
+        if row[engine._COL_PREFETCH]:
+            # successor exists, is valid, and sits in the same level
+            assert (t + 1) // nslots == t // nslots
+            assert table[t + 1, engine._COL_KIND] != engine._NOOP
+            assert table[t + 1, engine._COL_FETCHED] == 1
+            cur, nxt = task(row), task(table[t + 1])
+            cw = engine._task_writes(*cur)
+            cr = engine._task_reads(*cur)
+            nr = engine._task_reads(*nxt)
+            # the level-local safety invariant: prefetch (issued before
+            # the current task's write-back) never reads a stale tile
+            assert not (set(nr) & cw)
+            for b in range(3):
+                if table[t + 1, engine._COL_REUSE0 + b]:
+                    assert b < min(len(cr), len(nr)) and nr[b] == cr[b]
+            if table[t + 1, engine._COL_REUSET]:
+                assert (engine._task_t_source(*cur)
+                        == engine._task_t_source(*nxt) is not None)
+        else:
+            if t + 1 < table.shape[0]:
+                assert table[t + 1, engine._COL_FETCHED] == 0
+        if row[engine._COL_KIND] == engine._NOOP:
+            assert not row[engine._COL_PREFETCH] \
+                and not row[engine._COL_FETCHED]
+
+
+@pytest.mark.parametrize("p,q", [(1, 1), (2, 2), (4, 4), (5, 2), (2, 4)])
+def test_factor_tiles_megakernel_bitwise(p, q):
+    """The single-dispatch megakernel lowering is bitwise equal to the
+    jnp oracle AND to the per-level wavefront lowering."""
+    nb = 8
+    ws = _workspace(p, q, nb, seed=42)
+    f_jnp = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=False)
+    f_meg = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=True,
+                                dispatch_mode="megakernel")
+    f_wav = engine.factor_tiles(ws.copy(), p=p, q=q, nb=nb, use_kernel=True,
+                                dispatch_mode="wavefront")
+    _assert_state_bitwise(f_jnp, f_meg)
+    _assert_state_bitwise(f_wav, f_meg)
+
+
+@pytest.mark.parametrize("m,n", [(64, 64), (96, 48), (48, 96), (70, 50)])
+def test_tiled_qr_megakernel_bitwise(m, n):
+    """End-to-end tiled_qr on the megakernel dispatch mode is bitwise
+    equal to the jnp oracle, through padding, Q formation and all."""
+    rng = np.random.default_rng(m + n)
+    a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    qm, rm = tiled_qr(a, tile=16, use_kernel=True,
+                      dispatch_mode="megakernel")
+    qj, rj = tiled_qr(a, tile=16, use_kernel=False)
+    assert bool((qm == qj).all()) and bool((rm == rj).all())
+
+
+def _pallas_call_count(jaxpr) -> int:
+    """Count pallas_call equations anywhere in a (closed) jaxpr, walking
+    nested jaxprs through the public eqn-params surface."""
+    jx = getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
+    n = 0
+    for eqn in jx.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for val in eqn.params.values():
+            for sub in val if isinstance(val, (list, tuple)) else (val,):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    n += _pallas_call_count(sub)
+    return n
+
+
+@pytest.mark.parametrize("p,q", [(3, 3), (4, 2)])
+def test_megakernel_issues_single_pallas_call(p, q):
+    """The acceptance property: megakernel mode lowers the entire
+    factorization to exactly ONE pallas_call; wavefront mode issues one
+    per (wavefront, kind) batch — exactly schedule_stats' counts."""
+    nb = 8
+    ws = jax.ShapeDtypeStruct((p, q, nb, nb), jnp.float32)
+    stats = engine.schedule_stats(p, q, nb)
+
+    def counted(mode):
+        jaxpr = jax.make_jaxpr(
+            lambda w: engine._factor_impl(w, p, q, nb, True, True, mode))(ws)
+        return _pallas_call_count(jaxpr)
+
+    assert counted("megakernel") == stats["megakernel"]["dispatches"] == 1
+    assert counted("wavefront") == stats["wavefront"]["dispatches"]
+
+
+def test_schedule_stats_reports_both_modes():
+    stats = engine.schedule_stats(8, 8, nb=64)
+    assert stats["megakernel"]["dispatches"] == 1
+    assert stats["wavefront"]["dispatches"] == sum(
+        len(b) for b in engine.wavefront_task_arrays(8, 8))
+    assert stats["tasks"] == engine.task_count(8, 8)
+    assert stats["megakernel"]["table_bytes"] > 0
+    assert stats["megakernel"]["reused_tile_fetches"] > 0
+    assert stats["auto"] in engine.DISPATCH_MODES
+    # memoized construction: the same (p, q) returns the same array
+    t1, _, _ = engine.megakernel_task_table(8, 8)
+    t2, _, _ = engine.megakernel_task_table(8, 8)
+    assert t1 is t2
+
+
+def test_dispatch_mode_auto_rule():
+    """Auto picks megakernel inside both budgets and falls back to
+    wavefront when either the VMEM working set or the scalar-prefetch
+    task table outgrows its budget."""
+    from repro.core.plan import _KERNEL_POLICIES, register_kernel_policy
+
+    assert engine.resolve_dispatch_mode(8, 8, 64) == "megakernel"
+    # VMEM side: the double-buffered working set of a huge tile
+    assert engine.resolve_dispatch_mode(2, 2, 2048) == "wavefront"
+    # table side: shrink the policy budget under the 8x8 table
+    pol = _KERNEL_POLICIES["macro_ops"]
+    table_bytes = engine.schedule_stats(8, 8)["megakernel"]["table_bytes"]
+    try:
+        register_kernel_policy(
+            dataclasses.replace(pol, table_budget=table_bytes - 1))
+        assert engine.resolve_dispatch_mode(8, 8, 64) == "wavefront"
+    finally:
+        register_kernel_policy(pol)
+    # and the closed-form early-out rejects huge grids without building
+    # the table (the lru cache must not gain an entry)
+    info0 = engine.megakernel_task_table.cache_info()
+    assert engine.resolve_dispatch_mode(400, 400, 16) == "wavefront"
+    assert engine.megakernel_task_table.cache_info().misses == info0.misses
+
+
+@pytest.mark.parametrize("p,q", [(8, 8), (16, 4), (16, 16)])
+def test_megakernel_traffic_at_most_wavefront(p, q):
+    """The acceptance property behind bench_kernel_traffic's megakernel
+    row: per-task tile DMA in megakernel mode (double-buffer reuse) is
+    <= the wavefront mode's (every operand re-fetched per level) on
+    every level, and strictly less in total on >= 8x8 grids."""
+    reused = engine.megakernel_reused_reads(p, q)
+    per_level_dma = []
+    for lvl, by_kind in enumerate(engine.wavefront_task_arrays(p, q)):
+        tiles_moved = sum(
+            idx.shape[0] * (macro_ops.MACRO_OPS[kind].tile_reads
+                            + macro_ops.MACRO_OPS[kind].tile_writes)
+            for kind, idx in by_kind.items())
+        assert 0 <= int(reused[lvl]) <= tiles_moved
+        per_level_dma.append((tiles_moved - int(reused[lvl]), tiles_moved))
+    total_mega = sum(m_ for m_, _ in per_level_dma)
+    total_wave = sum(w for _, w in per_level_dma)
+    assert total_mega < total_wave
+
+
+def test_factor_tiles_megakernel_vmem_guard():
+    """Forcing dispatch_mode="megakernel" past the VMEM budget is an
+    error (auto would have fallen back to wavefront instead)."""
+    nb = 512  # 15 tiles * 512^2 * 4 bytes > the shared 8 MiB budget...
+    assert macro_ops.megakernel_vmem_bytes(nb) > macro_ops._POLICY.vmem_budget
+    # ...while the per-level wavefront working set (7 tiles) still fits —
+    # exactly the window where auto falls back instead of failing
+    assert macro_ops.engine_vmem_bytes(nb) <= macro_ops._POLICY.vmem_budget
+    assert engine.resolve_dispatch_mode(1, 1, nb) == "wavefront"
+    ws = jnp.zeros((1, 1, nb, nb), jnp.float32)
+    with pytest.raises(ValueError, match="megakernel VMEM"):
+        engine.factor_tiles(ws, p=1, q=1, nb=nb, use_kernel=True,
+                            dispatch_mode="megakernel")
+
+
+def test_factor_tiles_megakernel_table_guard():
+    """Forcing megakernel on a grid whose task table exceeds the
+    scalar-prefetch budget is refused up front (via the closed-form
+    task-count bound — no giant table is built just to error)."""
+    p = q = 100  # task_count * 64 B ~= 21.7 MB >> the 512 KiB budget
+    from repro.core.plan import kernel_table_budget
+
+    assert engine.task_count(p, q) * engine._NCOLS * 4 \
+        > kernel_table_budget("macro_ops")
+    ws = jnp.zeros((p, q, 2, 2), jnp.float32)
+    info0 = engine.megakernel_task_table.cache_info()
+    with pytest.raises(ValueError, match="task table"):
+        engine.factor_tiles(ws, p=p, q=q, nb=2, use_kernel=True,
+                            dispatch_mode="megakernel")
+    assert engine.megakernel_task_table.cache_info().misses == info0.misses
+
+
+def test_factor_tiles_dispatch_mode_guard():
+    ws = _workspace(2, 2, 8)
+    with pytest.raises(ValueError, match="dispatch_mode"):
+        engine.factor_tiles(ws, p=2, q=2, nb=8, use_kernel=True,
+                            dispatch_mode="warpspeed")
+
+
 def test_factor_tiles_matches_dense_qr():
     """The engine's R (joined from the workspace) matches jnp.linalg.qr
     up to column signs — anchoring the bitwise pair to ground truth."""
@@ -191,12 +426,15 @@ def test_ssrfb_body_matches_ref():
 
 # --------------------------------------------------------------- donation
 
-@pytest.mark.parametrize("use_kernel", [False, True])
-def test_factor_tiles_donates_workspace(use_kernel):
+@pytest.mark.parametrize("use_kernel,dispatch_mode",
+                         [(False, None), (True, "wavefront"),
+                          (True, "megakernel")])
+def test_factor_tiles_donates_workspace(use_kernel, dispatch_mode):
     """The factor loop consumes the caller's workspace buffer — the hot
     path must not retain a second copy of the input tile array."""
     ws = _workspace(3, 3, 8, seed=12)
-    out = engine.factor_tiles(ws, p=3, q=3, nb=8, use_kernel=use_kernel)
+    out = engine.factor_tiles(ws, p=3, q=3, nb=8, use_kernel=use_kernel,
+                              dispatch_mode=dispatch_mode)
     jax.block_until_ready(out.tiles)
     assert ws.is_deleted(), "input workspace was retained, not donated"
 

@@ -81,6 +81,65 @@ def test_qrconfig_validation():
         QRConfig(q_method="banana")
     with pytest.raises(ValueError, match="block"):
         QRConfig(block=0)
+    with pytest.raises(ValueError, match="dispatch_mode"):
+        QRConfig(dispatch_mode="warpspeed")
+
+
+def test_plan_resolves_engine_dispatch_mode():
+    """Engine-backed methods resolve dispatch_mode=None on the kernel
+    path (megakernel within budgets, honoring an explicit override) and
+    leave it None on the jnp-oracle path."""
+    shape = (96, 64)
+    resolved = plan(shape, jnp.float32,
+                    QRConfig(method="tiled", block=16, use_kernel=True))
+    assert resolved.config.dispatch_mode == "megakernel"
+    forced = plan(shape, jnp.float32,
+                  QRConfig(method="tiled", block=16, use_kernel=True,
+                           dispatch_mode="wavefront"))
+    assert forced.config.dispatch_mode == "wavefront"
+    oracle = plan(shape, jnp.float32,
+                  QRConfig(method="tiled", block=16, use_kernel=False))
+    assert oracle.config.dispatch_mode is None
+
+
+def test_plan_dispatch_mode_accounts_for_dtype():
+    """The auto rule resolves at the planned element width: a tile whose
+    double-buffered megakernel set fits in fp32 but not fp64 must pin
+    wavefront for fp64 input (else solve() would hit the runtime VMEM
+    guard instead of falling back)."""
+    from repro.kernels import macro_ops
+    from repro.core.plan import kernel_vmem_budget
+
+    nb = 288
+    budget = kernel_vmem_budget("macro_ops")
+    assert macro_ops.megakernel_vmem_bytes(nb, 4) <= budget \
+        < macro_ops.megakernel_vmem_bytes(nb, 8)
+    shape = (4 * nb, 2 * nb)
+    cfg = QRConfig(method="tiled", block=nb, use_kernel=True)
+    assert plan(shape, jnp.float32, cfg).config.dispatch_mode == "megakernel"
+    assert plan(shape, jnp.float64, cfg).config.dispatch_mode == "wavefront"
+    # the precision override wins over the input dtype
+    assert plan(shape, jnp.float64,
+                cfg.replace(precision="float32")
+                ).config.dispatch_mode == "megakernel"
+
+
+def test_kernel_fits_gate_prices_wavefront_floor():
+    """The planner's fits-in-VMEM gate prices the kernel path at its
+    wavefront floor: an fp64 shape whose wavefront set fits must keep
+    use_kernel on TPU even though the megakernel set would not (auto
+    then pins the wavefront lowering) — the megakernel is an opt-in
+    upgrade, never a reason to lose the kernel path."""
+    nb = 288
+    shape = (4 * nb, 2 * nb)
+    s64 = plan(shape, jnp.float64, QRConfig(method="tiled", block=nb),
+               backend="tpu")
+    assert s64.config.use_kernel is True
+    assert s64.config.dispatch_mode == "wavefront"
+    s32 = plan(shape, jnp.float32, QRConfig(method="tiled", block=nb),
+               backend="tpu")
+    assert s32.config.use_kernel is True
+    assert s32.config.dispatch_mode == "megakernel"
 
 
 def test_qrconfig_as_jit_static_arg():
