@@ -1,0 +1,186 @@
+"""QR serving microbenchmark — the decode-loop-style harness for the
+batched serving layer (QRService).
+
+Drives a steady-state request stream through the service the way the
+decode microbenchmark drives ServeEngine steps: warm the compiled-plan
+cache with one wave of the shape mix (cold compiles excluded from
+timing, exactly like discarding the first decode step), then run timed
+waves of heterogeneous requests through ``submit_many`` and report
+
+  * per-request latency p50 / p99 (a request's latency is the wall time
+    of the flush that served it),
+  * throughput in matrices/sec and effective GFLOP/s (thin-QR flop
+    count summed over the true, unpadded request shapes),
+  * bucket fill ratio and plan-cache hit rate from ``QRService.stats()``,
+  * speedup over the one-dispatch-per-request baseline (the same
+    stream, flushed after every submit — what serving without bucketing
+    would do).
+
+Records merge into BENCH_qr.json on the qr-bench-v2 schema via
+``benchmarks/run.py`` (serving rows carry extra ``p50_us`` /
+``p99_us`` / ``matrices_per_s`` / ``bucket_fill_ratio`` /
+``cache_hit_rate`` / ``speedup_vs_unbatched`` fields); standalone use
+writes BENCH_qr_serving.json:
+
+    PYTHONPATH=src python benchmarks/bench_qr_serving.py --smoke
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro.serving import BucketingPolicy, QRService
+
+# The mixes are weighted toward repeat shapes (steady-state serving
+# traffic is bursty around a few hot shape classes) with ragged
+# stragglers that bucket-pad into them.  Waves are deep (16 requests)
+# and shapes small-to-medium: many concurrent small QRs is the workload
+# batched serving exists for — per-dispatch overhead dominates there,
+# which is what bucketing amortizes (the >= 2x acceptance regime).
+_SMOKE_MIX = [(32, 32), (32, 32), (30, 28), (32, 32), (24, 24), (32, 32),
+              (32, 32), (33, 17)] * 2
+_FULL_MIX = [(128, 128), (128, 128), (120, 110), (96, 64), (128, 128),
+             (64, 64), (130, 120), (128, 128)] * 2
+
+
+def _qr_flops(m: int, n: int) -> float:
+    k = min(m, n)
+    return 2.0 * k * k * (m - k / 3.0)
+
+
+def _mk_wave(shapes, rng, dtype=np.float32):
+    return [rng.standard_normal(s).astype(dtype) for s in shapes]
+
+
+def _serve_stream(svc, waves, *, per_request: bool):
+    """Run the stream; returns (per-request latencies in seconds, total
+    wall).  ``per_request=True`` is the unbatched baseline: every submit
+    is flushed alone (one dispatch per request, no bucketing benefit,
+    same plan cache)."""
+    lat = []
+    t_start = time.perf_counter()
+    for wave in waves:
+        if per_request:
+            for a in wave:
+                t0 = time.perf_counter()
+                rid = svc.submit(a)
+                out = svc.flush()
+                np.asarray(out[rid].r)  # materialize
+                lat.append(time.perf_counter() - t0)
+        else:
+            t0 = time.perf_counter()
+            results = svc.submit_many(wave)
+            for res in results:
+                np.asarray(res.r)
+            lat.extend([time.perf_counter() - t0] * len(wave))
+    return lat, time.perf_counter() - t_start
+
+
+def _bench_config(label, mix, waves, *, use_kernel, dispatch_mode, tile,
+                  max_batch, seed=0):
+    """One serving record: warm, stream, baseline, stats."""
+    rng = np.random.default_rng(seed)
+    mk_svc = lambda: QRService(  # noqa: E731
+        policy=BucketingPolicy(tile=tile, max_batch=max_batch),
+        use_kernel=use_kernel, dispatch_mode=dispatch_mode)
+
+    svc = mk_svc()
+    svc.submit_many(_mk_wave(mix, rng))  # warm: compiles happen here
+    warm_compiles = svc.stats()["compiles"]
+    stream = [_mk_wave(mix, rng) for _ in range(waves)]
+    lat, wall = _serve_stream(svc, stream, per_request=False)
+    stats = svc.stats()
+    assert stats["compiles"] == warm_compiles, "recompiled mid-stream"
+
+    base = mk_svc()
+    # Warm the baseline's batch-1 plans in its own mode so its timed
+    # loop is equally compile-free — the comparison isolates bucketed
+    # batching, not cold compiles.
+    _serve_stream(base, [_mk_wave(mix, rng)], per_request=True)
+    _, base_wall = _serve_stream(base, stream, per_request=True)
+
+    nmat = waves * len(mix)
+    flops = waves * sum(_qr_flops(m, n) for m, n in mix)
+    mps, base_mps = nmat / wall, nmat / base_wall
+    return dict(
+        method=label, m=max(s[0] for s in mix), n=max(s[1] for s in mix),
+        dtype="float32",
+        wall_us=float(np.percentile(lat, 50) * 1e6),
+        gflops=flops / wall / 1e9,
+        engine=bool(use_kernel), dispatch_mode=dispatch_mode,
+        p50_us=float(np.percentile(lat, 50) * 1e6),
+        p99_us=float(np.percentile(lat, 99) * 1e6),
+        matrices_per_s=mps,
+        baseline_matrices_per_s=base_mps,
+        speedup_vs_unbatched=mps / base_mps,
+        bucket_fill_ratio=stats["bucket_fill_ratio"],
+        cache_hit_rate=stats["cache_hit_rate"],
+        dispatches=stats["dispatches"],
+        matrices_served=stats["matrices_served"],
+        shape_mix=[list(s) for s in mix],
+    ), stats
+
+
+def sweep(smoke: bool = False) -> list:
+    """Run the serving stream(s); returns qr-bench-v2-compatible records
+    (run.py merges them into BENCH_qr.json next to the method sweep)."""
+    mix = _SMOKE_MIX if smoke else _FULL_MIX
+    waves = 4 if smoke else 8
+    tile = 16 if smoke else 32
+    records = []
+    configs = [("qr_service[stream]", False, None)]
+    # Kernel serving twin: interpret-mode Pallas is only benchable on the
+    # smoke grid; on TPU the megakernel twin always runs.
+    if smoke or jax.default_backend() == "tpu":
+        configs.append(("qr_service[stream]+megakernel", True, "megakernel"))
+    for label, use_kernel, dispatch_mode in configs:
+        rec, stats = _bench_config(label, mix, waves, use_kernel=use_kernel,
+                                   dispatch_mode=dispatch_mode, tile=tile,
+                                   max_batch=16)
+        print(f"# {label} service stats: {stats}", file=sys.stderr)
+        records.append(rec)
+    return records
+
+
+def rows(records: list) -> list:
+    """Format serving records as the harness's CSV rows."""
+    return [
+        (f"qr_serving_{r['method']}", r["p50_us"],
+         f"p99_us={r['p99_us']:.1f};mat_per_s={r['matrices_per_s']:.1f};"
+         f"speedup={r['speedup_vs_unbatched']:.2f};"
+         f"fill={r['bucket_fill_ratio']:.2f};"
+         f"cache_hit={r['cache_hit_rate']:.2f}")
+        for r in records
+    ]
+
+
+def run(smoke: bool = False) -> list:
+    return rows(sweep(smoke=smoke))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shape mix + interpret-mode kernel twin")
+    ap.add_argument("--json", default="BENCH_qr_serving.json", metavar="PATH",
+                    help="where to write serving records (standalone runs)")
+    args = ap.parse_args()
+    records = sweep(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows(records):
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": "qr-bench-v2", "smoke": args.smoke,
+                       "records": records}, f, indent=1)
+        print(f"wrote {len(records)} records to {args.json}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,11 @@ Prints ``name,us_per_call,derived`` CSV rows, and serializes the QR
 method sweep (method x shape x dtype -> wall time / effective GFLOPs) to
 ``BENCH_qr.json`` so the perf trajectory is tracked across PRs.
 
-``--smoke`` runs only the QR sweep on a reduced grid (including the
-Pallas kernel paths in interpret mode) — the CI hook that catches
-kernel regressions on CPU.  The dry-run/roofline results
+``--smoke`` runs only the QR sweeps (methods + serving stream) on a
+reduced grid (including the Pallas kernel paths in interpret mode) —
+the CI hook that catches kernel regressions on CPU.  The serving
+records (bench_qr_serving: latency percentiles, matrices/sec, bucket
+fill, cache hit rate) merge into the same BENCH_qr.json.  The dry-run/roofline results
 (launch/dryrun.py + launch/roofline.py) are the TPU-side counterpart;
 these benches cover the paper's algorithmic claims on the host.
 """
@@ -26,7 +28,12 @@ _MODULES = [
     ("fig14e_scaling", "benchmarks.bench_scaling"),
     ("optim_beyond_paper", "benchmarks.bench_optim"),
     ("qr_methods", "benchmarks.bench_qr_methods"),
+    ("qr_serving", "benchmarks.bench_qr_serving"),
 ]
+
+# Modules whose sweep() records merge into the BENCH_qr.json trajectory
+# (qr-bench-v2 rows; serving rows carry extra latency/throughput fields).
+_QR_RECORD_MODULES = ("qr_methods", "qr_serving")
 
 
 def main() -> None:
@@ -40,7 +47,7 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke and args.only:
         ap.error("--smoke and --only are mutually exclusive")
-    only = ["qr_methods"] if args.smoke else (
+    only = list(_QR_RECORD_MODULES) if args.smoke else (
         args.only.split(",") if args.only else None)
 
     print("name,us_per_call,derived")
@@ -53,9 +60,10 @@ def main() -> None:
             import importlib
 
             mod = importlib.import_module(modname)
-            if label == "qr_methods":
-                qr_records = mod.sweep(smoke=args.smoke)
-                rows = mod.rows(qr_records)
+            if label in _QR_RECORD_MODULES:
+                records = mod.sweep(smoke=args.smoke)
+                qr_records = (qr_records or []) + records
+                rows = mod.rows(records)
             else:
                 rows = mod.run()
             for name, us, derived in rows:

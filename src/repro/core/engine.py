@@ -83,6 +83,7 @@ __all__ = [
     "DISPATCH_MODES",
     "FactorState",
     "factor_tiles",
+    "factor_tiles_batched",
     "megakernel_task_table",
     "resolve_dispatch_mode",
     "schedule_stats",
@@ -548,12 +549,14 @@ def _pallas_wavefront(state: FactorState, by_kind: Dict[str, np.ndarray],
 # level boundaries: the first slot of each level fetches synchronously,
 # after every prior write-back has completed — the wavefront barrier.
 
-def _op_copies(tab_ref, t, phase, ws, d_t, t_t, opbuf, tbuf, sems,
+def _op_copies(tab_ref, t, phase, ws_at, dt_at, tt_at, opbuf, tbuf, sems,
                start: bool):
     """Start (or wait for) the operand DMAs of task-table row ``t`` into
     buffer half ``phase``.  ``start`` is trace-time: the wait side
     rebuilds the identical descriptors, so each semaphore is started
-    exactly once per wait."""
+    exactly once per wait.  ``ws_at`` / ``dt_at`` / ``tt_at`` are
+    accessor closures over the workspace refs — the batched lowering
+    binds the batch index there, the single-matrix one binds nothing."""
     kind = tab_ref[t, _COL_KIND]
 
     def go(cp):
@@ -571,7 +574,7 @@ def _op_copies(tab_ref, t, phase, ws, d_t, t_t, opbuf, tbuf, sems,
 
         @pl.when(reuse == 0)
         def _():
-            go(pltpu.make_async_copy(ws.at[r, c], opbuf.at[phase, b],
+            go(pltpu.make_async_copy(ws_at(r, c), opbuf.at[phase, b],
                                      sems.at[phase, b]))
 
     tile_fetch(0)  # every kind reads at least one tile
@@ -598,11 +601,11 @@ def _op_copies(tab_ref, t, phase, ws, d_t, t_t, opbuf, tbuf, sems,
 
     @pl.when(kind == _KIND_ID["LARFB"])
     def _():
-        t_fetch(d_t.at[tab_ref[t, _COL_K]])
+        t_fetch(dt_at(tab_ref[t, _COL_K]))
 
     @pl.when(kind == _KIND_ID["SSRFB"])
     def _():
-        t_fetch(t_t.at[tab_ref[t, _COL_I], tab_ref[t, _COL_K]])
+        t_fetch(tt_at(tab_ref[t, _COL_I], tab_ref[t, _COL_K]))
 
 
 def _sync_put(src, dst, sem):
@@ -611,14 +614,27 @@ def _sync_put(src, dst, sem):
     cp.wait()
 
 
-def megakernel_kernel(tab_ref, ws_in, dt_in, dtaus_in, tt_in, ttaus_in,
-                      ws, d_t, d_taus, t_t, t_taus,
-                      opbuf, tbuf, outbuf, taubuf, sems, wbsem):
-    """One task-table slot per grid cell; the whole schedule is one call."""
-    del ws_in, dt_in, dtaus_in, tt_in, ttaus_in  # aliased in place
-    lvl = pl.program_id(0)
-    slot = pl.program_id(1)
-    t = lvl * pl.num_programs(1) + slot
+def _megakernel_step(tab_ref, ws, d_t, d_taus, t_t, t_taus,
+                     opbuf, tbuf, outbuf, taubuf, sems, wbsem,
+                     lvl, slot, nslots_axis: int, b=None):
+    """One task-table slot: fetch/prefetch bookkeeping + kind-switched
+    compute.  ``b`` is the (optional) batch index of the stacked-workspace
+    lowering — every batch element replays the SAME table, so the only
+    difference is the leading workspace index the accessors bind."""
+    if b is None:
+        ws_at = lambda r, c: ws.at[r, c]                    # noqa: E731
+        dt_at = lambda k: d_t.at[k]                         # noqa: E731
+        dtaus_at = lambda k: d_taus.at[k]                   # noqa: E731
+        tt_at = lambda i, k: t_t.at[i, k]                   # noqa: E731
+        ttaus_at = lambda i, k: t_taus.at[i, k]             # noqa: E731
+    else:
+        ws_at = lambda r, c: ws.at[b, r, c]                 # noqa: E731
+        dt_at = lambda k: d_t.at[b, k]                      # noqa: E731
+        dtaus_at = lambda k: d_taus.at[b, k]                # noqa: E731
+        tt_at = lambda i, k: t_t.at[b, i, k]                # noqa: E731
+        ttaus_at = lambda i, k: t_taus.at[b, i, k]          # noqa: E731
+
+    t = lvl * pl.num_programs(nslots_axis) + slot
     phase = jax.lax.rem(t, 2)
     kind = tab_ref[t, _COL_KIND]
     k = tab_ref[t, _COL_K]
@@ -629,19 +645,19 @@ def megakernel_kernel(tab_ref, ws_in, dt_in, dtaus_in, tt_in, ttaus_in,
     # -- operands: self-fetch at level heads, else already in flight ----
     @pl.when(valid & (tab_ref[t, _COL_FETCHED] == 0))
     def _():
-        _op_copies(tab_ref, t, phase, ws, d_t, t_t, opbuf, tbuf, sems,
-                   start=True)
+        _op_copies(tab_ref, t, phase, ws_at, dt_at, tt_at, opbuf, tbuf,
+                   sems, start=True)
 
     @pl.when(valid)
     def _():
-        _op_copies(tab_ref, t, phase, ws, d_t, t_t, opbuf, tbuf, sems,
-                   start=False)
+        _op_copies(tab_ref, t, phase, ws_at, dt_at, tt_at, opbuf, tbuf,
+                   sems, start=False)
 
     # -- double buffering: start the successor's fetches before compute -
     @pl.when(tab_ref[t, _COL_PREFETCH] == 1)
     def _():
-        _op_copies(tab_ref, t + 1, 1 - phase, ws, d_t, t_t, opbuf, tbuf,
-                   sems, start=True)
+        _op_copies(tab_ref, t + 1, 1 - phase, ws_at, dt_at, tt_at, opbuf,
+                   tbuf, sems, start=True)
 
     # -- compute: switch on kind into the shared macro-op bodies --------
     @pl.when(kind == _KIND_ID["GEQRT"])
@@ -650,15 +666,15 @@ def megakernel_kernel(tab_ref, ws_in, dt_in, dtaus_in, tt_in, ttaus_in,
         outbuf[0] = packed
         outbuf[1] = tmat
         taubuf[...] = taus
-        _sync_put(outbuf.at[0], ws.at[k, k], wbsem)
-        _sync_put(outbuf.at[1], d_t.at[k], wbsem)
-        _sync_put(taubuf, d_taus.at[k], wbsem)
+        _sync_put(outbuf.at[0], ws_at(k, k), wbsem)
+        _sync_put(outbuf.at[1], dt_at(k), wbsem)
+        _sync_put(taubuf, dtaus_at(k), wbsem)
 
     @pl.when(kind == _KIND_ID["LARFB"])
     def _():
         outbuf[0] = macro_ops.larfb_body(opbuf[phase, 0], tbuf[phase],
                                          opbuf[phase, 1])
-        _sync_put(outbuf.at[0], ws.at[k, j], wbsem)
+        _sync_put(outbuf.at[0], ws_at(k, j), wbsem)
 
     @pl.when(kind == _KIND_ID["TSQRT"])
     def _():
@@ -668,10 +684,10 @@ def megakernel_kernel(tab_ref, ws_in, dt_in, dtaus_in, tt_in, ttaus_in,
         outbuf[1] = v2
         outbuf[2] = tmat
         taubuf[...] = taus
-        _sync_put(outbuf.at[0], ws.at[k, k], wbsem)
-        _sync_put(outbuf.at[1], ws.at[i, k], wbsem)
-        _sync_put(outbuf.at[2], t_t.at[i, k], wbsem)
-        _sync_put(taubuf, t_taus.at[i, k], wbsem)
+        _sync_put(outbuf.at[0], ws_at(k, k), wbsem)
+        _sync_put(outbuf.at[1], ws_at(i, k), wbsem)
+        _sync_put(outbuf.at[2], tt_at(i, k), wbsem)
+        _sync_put(taubuf, ttaus_at(i, k), wbsem)
 
     @pl.when(kind == _KIND_ID["SSRFB"])
     def _():
@@ -679,8 +695,37 @@ def megakernel_kernel(tab_ref, ws_in, dt_in, dtaus_in, tt_in, ttaus_in,
                                       opbuf[phase, 1], opbuf[phase, 2])
         outbuf[0] = ck
         outbuf[1] = ci
-        _sync_put(outbuf.at[0], ws.at[k, j], wbsem)
-        _sync_put(outbuf.at[1], ws.at[i, j], wbsem)
+        _sync_put(outbuf.at[0], ws_at(k, j), wbsem)
+        _sync_put(outbuf.at[1], ws_at(i, j), wbsem)
+
+
+def megakernel_kernel(tab_ref, ws_in, dt_in, dtaus_in, tt_in, ttaus_in,
+                      ws, d_t, d_taus, t_t, t_taus,
+                      opbuf, tbuf, outbuf, taubuf, sems, wbsem):
+    """One task-table slot per grid cell; the whole schedule is one call."""
+    del ws_in, dt_in, dtaus_in, tt_in, ttaus_in  # aliased in place
+    _megakernel_step(tab_ref, ws, d_t, d_taus, t_t, t_taus,
+                     opbuf, tbuf, outbuf, taubuf, sems, wbsem,
+                     lvl=pl.program_id(0), slot=pl.program_id(1),
+                     nslots_axis=1)
+
+
+def megakernel_batched_kernel(tab_ref, ws_in, dt_in, dtaus_in, tt_in,
+                              ttaus_in, ws, d_t, d_taus, t_t, t_taus,
+                              opbuf, tbuf, outbuf, taubuf, sems, wbsem):
+    """The batched megakernel: grid ``(B, levels, slots)`` — ONE
+    pallas_call factors the whole stacked ``(B, p, q, nb, nb)`` workspace
+    by replaying the SAME task table per batch element.  The flat task
+    index (and with it the double-buffer parity and the prefetch chain)
+    restarts at every batch boundary: the last slot of a schedule never
+    prefetches (``_COL_PREFETCH`` is 0 there) and the first slot of the
+    next element self-fetches (``_COL_FETCHED`` is 0), so batch elements
+    are as isolated as levels are."""
+    del ws_in, dt_in, dtaus_in, tt_in, ttaus_in  # aliased in place
+    _megakernel_step(tab_ref, ws, d_t, d_taus, t_t, t_taus,
+                     opbuf, tbuf, outbuf, taubuf, sems, wbsem,
+                     lvl=pl.program_id(1), slot=pl.program_id(2),
+                     nslots_axis=2, b=pl.program_id(0))
 
 
 def _dispatch_megakernel(state: FactorState, p: int, q: int, nb: int,
@@ -703,6 +748,39 @@ def _dispatch_megakernel(state: FactorState, p: int, q: int, nb: int,
     )
     outs = pl.pallas_call(
         megakernel_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype) for x in state],
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4},
+        interpret=interpret,
+    )(jnp.asarray(table_np), *state)
+    return FactorState(*outs)
+
+
+def _dispatch_megakernel_batched(state: FactorState, p: int, q: int,
+                                 nb: int, interpret: bool) -> FactorState:
+    """ONE pallas_call for a whole bucket: the single-matrix megakernel
+    grid extended by a leading batch axis.  One task table (scalar
+    prefetch) is shared across the batch; the per-step VMEM working set
+    is batch-invariant (``macro_ops.batched_megakernel_vmem_bytes``)."""
+    table_np, nlevels, nslots = megakernel_task_table(p, q)
+    batch = state.tiles.shape[0]
+    dt = state.tiles.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(batch, nlevels, nslots),
+        in_specs=[_any_spec()] * 5,
+        out_specs=[_any_spec()] * 5,
+        scratch_shapes=[
+            pltpu.VMEM((2, 3, nb, nb), dt),   # double-buffered operand tiles
+            pltpu.VMEM((2, nb, nb), dt),      # double-buffered T operand
+            pltpu.VMEM((3, nb, nb), dt),      # write-back staging
+            pltpu.VMEM((nb,), dt),            # taus staging
+            pltpu.SemaphoreType.DMA((2, 4)),  # per (phase, operand) fetch
+            pltpu.SemaphoreType.DMA,          # synchronous write-back
+        ],
+    )
+    outs = pl.pallas_call(
+        megakernel_batched_kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype) for x in state],
         input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3, 5: 4},
@@ -740,6 +818,48 @@ _factor_jit = jax.jit(_factor_impl, static_argnums=(1, 2, 3, 4, 5, 6),
                       donate_argnums=(0,))
 
 
+def _factor_batched_impl(tiles: Array, p: int, q: int, nb: int,
+                         use_kernel: bool, interpret: bool,
+                         dispatch_mode: str = "wavefront") -> FactorState:
+    """Factor a stacked ``(B, p, q, nb, nb)`` workspace — per-slice
+    BITWISE equal to B independent :func:`_factor_impl` runs.
+
+    Megakernel mode extends the persistent kernel's grid by a leading
+    batch axis (still exactly ONE ``pallas_call`` per bucket, one shared
+    task table).  The wavefront and jnp lowerings vmap the single-matrix
+    path — bitwise-clean because every per-task op keeps its task-batch
+    shape under the outer vmap.  ``B == 1`` runs the single-matrix path
+    directly: a batch-1 outer vmap lowers ``dot_general`` through a
+    different contraction (the same quirk :func:`_batched` documents),
+    which would break per-slice parity exactly in the degenerate case
+    buckets hit most often.
+    """
+    batch = tiles.shape[0]
+    if batch == 1:
+        state = _factor_impl(tiles[0], p, q, nb, use_kernel, interpret,
+                             dispatch_mode)
+        return FactorState(*(x[None] for x in state))
+    if use_kernel and dispatch_mode == "megakernel":
+        r = min(p, q)
+        dt = tiles.dtype
+        state = FactorState(
+            tiles,
+            jnp.zeros((batch, r, nb, nb), dt),
+            jnp.zeros((batch, r, nb), dt),
+            jnp.zeros((batch, p, r, nb, nb), dt),
+            jnp.zeros((batch, p, r, nb), dt),
+        )
+        return _dispatch_megakernel_batched(state, p, q, nb, interpret)
+    return jax.vmap(
+        lambda w: _factor_impl(w, p, q, nb, use_kernel, interpret,
+                               dispatch_mode))(tiles)
+
+
+_factor_batched_jit = jax.jit(_factor_batched_impl,
+                              static_argnums=(1, 2, 3, 4, 5, 6),
+                              donate_argnums=(0,))
+
+
 def factor_tiles(tiles: Array, *, p: int, q: int, nb: int,
                  use_kernel: bool = False,
                  interpret: Optional[bool] = None,
@@ -764,6 +884,24 @@ def factor_tiles(tiles: Array, *, p: int, q: int, nb: int,
         raise ValueError(
             f"expected a ({p}, {q}, {nb}, {nb}) tile workspace, "
             f"got {tiles.shape}")
+    mode = _check_dispatch(tiles.dtype, p, q, nb, use_kernel, dispatch_mode)
+    if interpret is None:
+        interpret = macro_ops.default_interpret()
+    return _factor_jit(tiles, p, q, nb, bool(use_kernel), bool(interpret),
+                       mode)
+
+
+def _check_dispatch(dtype, p: int, q: int, nb: int, use_kernel: bool,
+                    dispatch_mode: Optional[str], batched: bool = False
+                    ) -> str:
+    """Shared mode resolution + budget guards of the factor entry points.
+
+    Returns the concrete dispatch mode; raises when a *forced* mode does
+    not fit its VMEM / task-table budget (auto never picks past them).
+    The batched lowering changes neither limit: the batch axis is an
+    outer sequential grid dimension over one shared table, so the
+    per-step working set and the scalar-prefetch bytes are
+    batch-invariant (``macro_ops.batched_megakernel_vmem_bytes``)."""
     if dispatch_mode not in (None,) + DISPATCH_MODES:
         raise ValueError(
             f"unknown dispatch_mode {dispatch_mode!r}; expected one of "
@@ -772,12 +910,15 @@ def factor_tiles(tiles: Array, *, p: int, q: int, nb: int,
     if use_kernel:
         from repro.core.plan import kernel_table_budget, kernel_vmem_budget
 
-        itemsize = jnp.dtype(tiles.dtype).itemsize
+        itemsize = jnp.dtype(dtype).itemsize
         mode = (resolve_dispatch_mode(p, q, nb, itemsize)
                 if dispatch_mode is None else dispatch_mode)
-        need = (macro_ops.megakernel_vmem_bytes(nb, itemsize)
-                if mode == "megakernel"
-                else macro_ops.engine_vmem_bytes(nb, itemsize))
+        if mode == "megakernel":
+            need = (macro_ops.batched_megakernel_vmem_bytes(nb, itemsize)
+                    if batched else
+                    macro_ops.megakernel_vmem_bytes(nb, itemsize))
+        else:
+            need = macro_ops.engine_vmem_bytes(nb, itemsize)
         budget = kernel_vmem_budget("macro_ops")
         if need > budget:
             raise ValueError(
@@ -796,7 +937,37 @@ def factor_tiles(tiles: Array, *, p: int, q: int, nb: int,
                     f"(>= {tbytes} bytes) exceeds the scalar-prefetch "
                     f"budget ({tbudget}); grow the tile or use "
                     f"dispatch_mode='wavefront'")
+    return mode
+
+
+def factor_tiles_batched(tiles: Array, *, p: int, q: int, nb: int,
+                         use_kernel: bool = False,
+                         interpret: Optional[bool] = None,
+                         dispatch_mode: Optional[str] = None) -> FactorState:
+    """Run the full wavefront schedule over a stacked ``(B, p, q, nb, nb)``
+    workspace — B independent factorizations in one dispatch, the
+    serving layer's batched entry point (:mod:`repro.serving.qr_service`).
+
+    Per batch slice the result is **bitwise** equal to
+    :func:`factor_tiles` on that slice (asserted across the conformance
+    matrix in tests/test_qr_service.py and tests/test_conformance.py).
+    On the kernel path, ``dispatch_mode="megakernel"`` extends the
+    persistent kernel's grid by a leading batch axis — still exactly ONE
+    ``pallas_call`` for the whole bucket, sharing one scalar-prefetched
+    task table across the batch; ``"wavefront"`` and the jnp-oracle
+    lowering (``use_kernel=False``) vmap the single-matrix path.  As in
+    :func:`factor_tiles`, the workspace argument is **donated**.
+    """
+    if tiles.ndim != 5 or tiles.shape[1:3] != (p, q) \
+            or tiles.shape[3:] != (nb, nb):
+        raise ValueError(
+            f"expected a (B, {p}, {q}, {nb}, {nb}) stacked tile "
+            f"workspace, got {tiles.shape}")
+    if tiles.shape[0] < 1:
+        raise ValueError("batched workspace needs at least one slice")
+    mode = _check_dispatch(tiles.dtype, p, q, nb, use_kernel, dispatch_mode,
+                           batched=True)
     if interpret is None:
         interpret = macro_ops.default_interpret()
-    return _factor_jit(tiles, p, q, nb, bool(use_kernel), bool(interpret),
-                       mode)
+    return _factor_batched_jit(tiles, p, q, nb, bool(use_kernel),
+                               bool(interpret), mode)

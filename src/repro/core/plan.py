@@ -129,6 +129,13 @@ _TILED_MIN_DIM = 256
 _TILED_MAX_DIM = 2048
 _TILED_MAX_ASPECT = 4.0
 
+# On CPU the tiled backend runs through the jnp task-graph oracle and
+# has to beat multithreaded LAPACK geqrf, which it only does once the
+# wavefront is wide enough to amortize per-task overhead: at 256^2 the
+# measured wall is ~2.2x geqrf (see ROADMAP smoke table), crossing over
+# near 512.  Keep the 256 floor where the kernel path exists.
+_TILED_MIN_DIM_CPU = 512
+
 # Near-square matrices past the single-device tiled ceiling route to the
 # multi-device sharded_tiled backend when more than one device is
 # available: each device owns a contiguous row-block domain of the tile
@@ -378,7 +385,9 @@ def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = No
     1. tall-skinny (aspect >= tsqr's min_aspect, default 4:1) -> TSQR,
        with ``nblocks`` chosen by the planner;
     2. large near-square (256 <= dims <= 2048, aspect < 4) -> ``tiled``
-       task-graph (cross-panel wavefront parallelism);
+       task-graph (cross-panel wavefront parallelism); on CPU the floor
+       is 512 — below that multithreaded LAPACK geqrf wins and the
+       request falls through to rule 6;
     3. near-square but past the single-device tiled ceiling, with more
        than one device available (``ndevices``, default
        ``jax.local_device_count()``) -> ``sharded_tiled``: per-device
@@ -399,7 +408,8 @@ def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = No
     if (tspec is not None and config.mode != "full" and n >= 1 and m >= 8
             and m >= tspec.min_aspect * n):
         return "tsqr"
-    near_square = (min(m, n) >= _TILED_MIN_DIM
+    tiled_floor = _TILED_MIN_DIM_CPU if backend == "cpu" else _TILED_MIN_DIM
+    near_square = (min(m, n) >= tiled_floor
                    and max(m, n) < _TILED_MAX_ASPECT * min(m, n))
     if "tiled" in _REGISTRY and near_square and max(m, n) <= _TILED_MAX_DIM:
         return "tiled"

@@ -77,6 +77,7 @@ __all__ = [
     "vmem_bytes",
     "engine_vmem_bytes",
     "megakernel_vmem_bytes",
+    "batched_megakernel_vmem_bytes",
     "MEGAKERNEL_VMEM_TILES",
 ]
 
@@ -410,6 +411,18 @@ def megakernel_vmem_bytes(nb: int, itemsize: int = 4) -> int:
     """Resident working set of the engine's single-dispatch megakernel
     lowering at tile size nb (double-buffered operands + staging)."""
     return MEGAKERNEL_VMEM_TILES * nb * nb * itemsize
+
+
+def batched_megakernel_vmem_bytes(nb: int, itemsize: int = 4,
+                                  batch: int = 1) -> int:
+    """Resident working set of the *batched* megakernel
+    (``engine.factor_tiles_batched``): the batch is an outer sequential
+    grid axis replaying one shared task table, so the per-step set —
+    double-buffered operands + staging — does not grow with ``batch``.
+    The explicit ``batch`` parameter keeps the serving layer's VMEM
+    gating honest about that invariance instead of assuming it."""
+    del batch  # batch-invariant by construction (outer grid axis)
+    return megakernel_vmem_bytes(nb, itemsize)
 
 
 _POLICY = register_kernel_policy(KernelPolicy(

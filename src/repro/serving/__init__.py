@@ -1,5 +1,25 @@
-"""Serving substrate."""
+"""Serving layer: autoregressive LM decode (ServeEngine) and batched
+QR-as-a-service (QRService) — two consumers of the same compiled-plan
+discipline: bucket dynamic traffic into a small set of static shapes,
+cache the compiled executables, keep steady state compile-free."""
 
+from repro.serving.bucketing import (
+    BucketKey, BucketingPolicy, bucket_key, bucketize, pad_batch, pad_dim,
+    pow2ish_edges)
 from repro.serving.engine import ServeEngine, serve_step
+from repro.serving.qr_service import QRRequest, QRResult, QRService
 
-__all__ = ["ServeEngine", "serve_step"]
+__all__ = [
+    "BucketKey",
+    "BucketingPolicy",
+    "QRRequest",
+    "QRResult",
+    "QRService",
+    "ServeEngine",
+    "bucket_key",
+    "bucketize",
+    "pad_batch",
+    "pad_dim",
+    "pow2ish_edges",
+    "serve_step",
+]

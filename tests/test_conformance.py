@@ -210,6 +210,51 @@ def test_engine_path_bitwise_vs_oracle(method, dispatch_mode, matrices):
         f"{dispatch_mode} engine R != oracle R (bitwise)"
 
 
+# --------------------------------------------- batched engine (serving hook)
+
+from repro.core import engine  # noqa: E402
+from repro.core.tilegraph import _split_tiles  # noqa: E402
+
+
+@pytest.mark.parametrize("dispatch_mode", [None, "wavefront", "megakernel"],
+                         ids=["jnp", "wavefront", "megakernel"])
+@pytest.mark.parametrize("batch", [1, 3])
+@pytest.mark.parametrize("grid", [(3, 3), (3, 2), (2, 3)],
+                         ids=["square", "tall", "wide"])
+def test_factor_tiles_batched_bitwise_per_slice(dispatch_mode, batch, grid,
+                                                matrices):
+    """The serving contract: ``factor_tiles_batched`` over a stacked
+    workspace is BITWISE-identical per slice to B independent
+    ``factor_tiles`` runs — on the jnp oracle, the wavefront kernels,
+    and the batched megakernel (interpret on CPU).  Slices include
+    ragged bucket padding (odd slices carry a smaller matrix zero-padded
+    to the bucket shape, exactly what QRService stages) and the B=1
+    degeneracy.  Not a tolerance — equality."""
+    p, q = grid
+    nb = BLOCK
+    use_kernel = dispatch_mode is not None
+    mats = []
+    for b in range(batch):
+        mr = p * nb - (b % 2) * (nb // 2)  # ragged rows/cols on odd slices
+        nr = q * nb - (b % 2) * (nb // 2)
+        a = matrices.well_conditioned(mr, nr, cond=100.0)
+        mats.append(jnp.zeros((p * nb, q * nb), a.dtype).at[:mr, :nr].set(a))
+    tiles = jnp.stack([_split_tiles(a, p, q, nb) for a in mats])
+    singles = [engine.factor_tiles(tiles[b], p=p, q=q, nb=nb,
+                                   use_kernel=use_kernel,
+                                   dispatch_mode=dispatch_mode)
+               for b in range(batch)]
+    batched = engine.factor_tiles_batched(tiles, p=p, q=q, nb=nb,
+                                          use_kernel=use_kernel,
+                                          dispatch_mode=dispatch_mode)
+    for b, single in enumerate(singles):
+        for field, bat, ref in zip(engine.FactorState._fields, batched,
+                                   single):
+            assert bool((bat[b] == ref).all()), \
+                f"slice {b} field {field} differs from independent run " \
+                f"(dispatch_mode={dispatch_mode})"
+
+
 def test_registry_has_all_expected_methods():
     """The suite is only meaningful if it sweeps the full registry."""
     for name in ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr", "tiled",

@@ -252,6 +252,20 @@ def test_megakernel_issues_single_pallas_call(p, q):
     assert counted("wavefront") == stats["wavefront"]["dispatches"]
 
 
+@pytest.mark.parametrize("batch", [2, 4])
+def test_batched_megakernel_issues_single_pallas_call(batch):
+    """The serving acceptance property: a whole bucket — B stacked
+    workspaces — still lowers to exactly ONE pallas_call in megakernel
+    mode (the batch rides the grid's outer axis, sharing one task
+    table, not the dispatch count)."""
+    p, q, nb = 3, 3, 8
+    ws = jax.ShapeDtypeStruct((batch, p, q, nb, nb), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda w: engine._factor_batched_impl(w, p, q, nb, True, True,
+                                              "megakernel"))(ws)
+    assert _pallas_call_count(jaxpr) == 1
+
+
 def test_schedule_stats_reports_both_modes():
     stats = engine.schedule_stats(8, 8, nb=64)
     assert stats["megakernel"]["dispatches"] == 1

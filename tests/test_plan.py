@@ -188,14 +188,19 @@ def test_auto_skips_kernel_when_panel_exceeds_vmem():
     ((1024, 256), "cpu", 1, "tsqr"),       # exactly 4:1 is still TSQR
     ((512, 512), "cpu", 1, "tiled"),       # large near-square -> task graph
     ((512, 512), "tpu", 1, "tiled"),
-    ((1023, 256), "cpu", 1, "tiled"),
-    ((300, 280), "cpu", 1, "tiled"),
+    ((1023, 256), "cpu", 1, "geqrf_ht"),   # under the raised CPU floor
+    ((1023, 512), "cpu", 1, "tiled"),      # at the CPU floor
+    ((1023, 256), "tpu", 1, "tiled"),      # TPU keeps the 256 floor
+    ((300, 280), "cpu", 1, "geqrf_ht"),    # LAPACK geqrf wins small squares
+    ((300, 280), "tpu", 1, "tiled"),
     ((2048, 1024), "cpu", 1, "tiled"),     # at the tiled ceiling
     ((2049, 1024), "cpu", 1, "geqrf_ht"),  # past it: DAG would be too big
     ((40000, 16384), "tpu", 1, "geqrf_ht"),
     ((256, 128), "tpu", 1, "geqrf_ht"),    # min dim below the tiled floor
     ((256, 128), "cpu", 1, "geqrf_ht"),
-    ((255, 255), "cpu", 1, "geqrf_ht"),    # one short of the floor
+    ((255, 255), "cpu", 1, "geqrf_ht"),    # one short of the (TPU) floor
+    ((511, 500), "cpu", 1, "geqrf_ht"),    # one short of the CPU floor
+    ((256, 256), "tpu", 1, "tiled"),       # TPU floor unchanged at 256
     ((256, 40000), "cpu", 1, "geqrf_ht"),  # wide but far from square
     ((24, 16), "cpu", 1, "geqr2_ht"),      # single panel
     # -- device-count-aware rows: past the tiled ceiling, near-square --

@@ -1,0 +1,269 @@
+"""QR serving layer: bucketing properties, service correctness, and
+plan-cache behavior.
+
+The load-bearing claims, each pinned by a test here or in the
+conformance suite:
+
+  * every request lands in exactly ONE bucket, and the per-dimension
+    waste cap is honored whenever achievable at tile granularity
+    (property tests over random request mixes);
+  * serving answers equal the per-request path's answers — batched
+    bitwise parity lives in test_conformance.py; here the end-to-end
+    service (pad -> batch -> dispatch -> unpad) meets the numerical bar
+    on heterogeneous mixes, both modes, both lowerings;
+  * steady-state serving performs ZERO recompilations (the plan cache's
+    compile counter is flat across repeated identical traffic);
+  * the plan cache is a real LRU: hits refresh recency, evictions hit
+    the least-recently-used plan, counters expose all of it.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis_compat import given, settings, st
+from repro.serving import (
+    BucketKey, BucketingPolicy, QRService, bucket_key, bucketize, pad_batch,
+    pad_dim, pow2ish_edges)
+
+# ------------------------------------------------------------- bucketing
+
+
+@given(tile=st.sampled_from([8, 16, 32, 64]), d=st.integers(1, 5000),
+       waste=st.floats(0.05, 0.5))
+def test_pad_dim_properties(tile, d, waste):
+    """Padded extent is a tile multiple >= max(d, tile); it is either a
+    pow2-ish edge within the waste cap or the tile-granularity fallback;
+    and the cap is honored whenever tile granularity can honor it."""
+    e = pad_dim(d, tile=tile, max_waste=waste)
+    assert e >= d and e >= tile and e % tile == 0
+    tiled_up = -(-d // tile) * tile
+    assert e == tiled_up or ((e - d) / e <= waste
+                             and e in pow2ish_edges(tile, d))
+    if (tiled_up - d) / tiled_up <= waste:
+        assert (e - d) / e <= waste, \
+            f"cap achievable at tile granularity but violated: {e} for {d}"
+
+
+def test_pad_dim_monotone():
+    """Bucket edges never cross: a larger matrix never gets a smaller
+    bucket (required for the bucket count to stay logarithmic)."""
+    for tile, waste in [(16, 0.25), (32, 0.25), (8, 0.1)]:
+        pads = [pad_dim(d, tile=tile, max_waste=waste)
+                for d in range(1, 700)]
+        assert all(a <= b for a, b in zip(pads, pads[1:]))
+
+
+def test_pow2ish_edges_ladder():
+    assert pow2ish_edges(32, 200) == (32, 64, 96, 128, 192, 256)
+    # consecutive ratio <= 1.5 from the third edge on
+    edges = pow2ish_edges(16, 10000)
+    ratios = [b / a for a, b in zip(edges[2:], edges[3:])]
+    assert max(ratios) <= 1.5
+
+
+def test_pad_batch_pow2_capped():
+    assert [pad_batch(b, max_batch=8) for b in (1, 2, 3, 4, 5, 8, 9, 100)] \
+        == [1, 2, 4, 4, 8, 8, 8, 8]
+    with pytest.raises(ValueError):
+        pad_batch(0, max_batch=8)
+
+
+def test_policy_and_key_validation():
+    with pytest.raises(ValueError):
+        BucketingPolicy(tile=0)
+    with pytest.raises(ValueError):
+        BucketingPolicy(max_waste=1.0)
+    with pytest.raises(ValueError):
+        BucketKey(m=32, n=32, dtype="float32", mode="full")
+
+
+@dataclasses.dataclass
+class _Req:
+    shape: tuple
+    dtype: str
+    mode: str
+
+
+@given(seed=st.integers(0, 10_000), nreq=st.integers(1, 40))
+def test_every_request_lands_in_exactly_one_bucket(seed, nreq):
+    """bucketize partitions the request stream: every request appears
+    exactly once, in the bucket bucket_key maps it to."""
+    rng = np.random.default_rng(seed)
+    policy = BucketingPolicy(tile=16, max_waste=0.3, max_batch=8)
+    reqs = [_Req(shape=(int(rng.integers(1, 400)), int(rng.integers(1, 400))),
+                 dtype=str(rng.choice(["float32", "float64"])),
+                 mode=str(rng.choice(["reduced", "r"])))
+            for _ in range(nreq)]
+    buckets = bucketize(reqs, policy)
+    seen = []
+    for key, members in buckets.items():
+        for r in members:
+            assert bucket_key(*r.shape, r.dtype, r.mode, policy) == key
+            assert key.m >= r.shape[0] and key.n >= r.shape[1]
+            seen.append(id(r))
+    assert sorted(seen) == sorted(id(r) for r in reqs)
+
+
+# ------------------------------------------------------------ the service
+
+
+def _check_qr(a, q, r, tol=2e-4):
+    m, n = a.shape
+    k = min(m, n)
+    q, r = np.asarray(q), np.asarray(r)
+    assert q.shape == (m, k) and r.shape == (k, n)
+    assert np.abs(q @ r - a).max() <= tol
+    assert np.abs(q.T @ q - np.eye(k, dtype=a.dtype)).max() <= tol
+    assert np.abs(np.tril(r[:, :k], -1)).max() == 0.0
+
+
+@pytest.fixture
+def service():
+    return QRService(policy=BucketingPolicy(tile=16, max_batch=4),
+                     use_kernel=False)
+
+
+def test_heterogeneous_mix_reduced(service):
+    """Square / tall / wide / off-tile requests through one flush; every
+    answer is the unpadded factorization of ITS matrix."""
+    rng = np.random.default_rng(0)
+    shapes = [(48, 48), (96, 32), (20, 50), (37, 23), (48, 48), (45, 45)]
+    arrs = [rng.standard_normal(s).astype(np.float32) for s in shapes]
+    results = service.submit_many(arrs)
+    assert len(results) == len(arrs)
+    for a, res in zip(arrs, results):
+        _check_qr(a, res.q, res.r)
+    stats = service.stats()
+    assert stats["matrices_served"] == len(arrs)
+    assert stats["requests"] == len(arrs)
+    assert stats["dispatches"] >= 1
+
+
+def test_r_mode(service):
+    rng = np.random.default_rng(1)
+    arrs = [rng.standard_normal((40, 24)).astype(np.float32)
+            for _ in range(3)]
+    results = service.submit_many(arrs, mode="r")
+    for a, res in zip(arrs, results):
+        assert res.q is None
+        r = np.asarray(res.r)
+        assert r.shape == (24, 24)
+        assert np.abs(np.tril(r, -1)).max() == 0.0
+        assert np.abs(r.T @ r - a.T @ a).max() <= 2e-3 * np.abs(a.T @ a).max()
+
+
+def test_submit_flush_rids(service):
+    """flush keys results by rid; interleaved modes coexist."""
+    rng = np.random.default_rng(2)
+    a, b = (rng.standard_normal((32, 32)).astype(np.float32)
+            for _ in range(2))
+    ra = service.submit(a)
+    rb = service.submit(b, mode="r")
+    out = service.flush()
+    assert set(out) == {ra, rb}
+    _check_qr(a, out[ra].q, out[ra].r)
+    assert out[rb].q is None
+    assert service.flush() == {}  # queue drained
+
+
+def test_ragged_bucket_padding(service):
+    """Different true shapes sharing one bucket: each slice's answer is
+    its own unpadded factorization (zero padding is numerically free)."""
+    rng = np.random.default_rng(3)
+    shapes = [(64, 48), (60, 40), (57, 33)]  # all bucket to (64, 48)
+    arrs = [rng.standard_normal(s).astype(np.float32) for s in shapes]
+    results = service.submit_many(arrs)
+    for a, res in zip(arrs, results):
+        _check_qr(a, res.q, res.r)
+    stats = service.stats()
+    assert stats["dispatches"] == 1, "one bucket must mean one dispatch"
+    assert stats["padded_slots"] == 1  # batch 3 -> padded batch 4
+    assert stats["bucket_fill_ratio"] == pytest.approx(3 / 4)
+
+
+def test_max_batch_chunking(service):
+    """A bucket larger than max_batch splits into full chunks."""
+    rng = np.random.default_rng(4)
+    arrs = [rng.standard_normal((32, 32)).astype(np.float32)
+            for _ in range(6)]  # max_batch=4 -> chunks of 4 and 2
+    results = service.submit_many(arrs)
+    for a, res in zip(arrs, results):
+        _check_qr(a, res.q, res.r)
+    assert service.stats()["dispatches"] == 2
+    assert service.stats()["padded_slots"] == 0  # 4 and 2 both pow2
+
+
+def test_kernel_megakernel_serving_path():
+    """The Pallas serving path (interpret on CPU): one bucket, batched
+    megakernel dispatch, same numerical bar."""
+    rng = np.random.default_rng(5)
+    svc = QRService(policy=BucketingPolicy(tile=16, max_batch=4),
+                    use_kernel=True, dispatch_mode="megakernel")
+    arrs = [rng.standard_normal((48, 32)).astype(np.float32)
+            for _ in range(2)]
+    for a, res in zip(arrs, svc.submit_many(arrs)):
+        _check_qr(a, res.q, res.r)
+    assert svc.stats()["dispatches"] == 1
+
+
+def test_submit_validation(service):
+    with pytest.raises(ValueError):
+        service.submit(np.zeros((3, 3, 3), np.float32))
+    with pytest.raises(ValueError):
+        service.submit(np.zeros((3, 3), np.float32), mode="full")
+    with pytest.raises(ValueError):
+        QRService(cache_size=0)
+
+
+# ------------------------------------------------------------- plan cache
+
+
+def test_zero_recompiles_steady_state(service):
+    """THE serving acceptance property: once the cache is warm, repeated
+    traffic with the same shape mix compiles NOTHING new."""
+    rng = np.random.default_rng(6)
+    shapes = [(48, 48), (96, 32), (37, 23)]
+
+    def mix():
+        return [rng.standard_normal(s).astype(np.float32) for s in shapes]
+
+    service.submit_many(mix())          # cold: compiles happen here
+    warm = service.stats()["compiles"]
+    assert warm > 0
+    for _ in range(3):                  # steady state
+        for a, res in zip(*(lambda m: (m, service.submit_many(m)))(mix())):
+            _check_qr(a, res.q, res.r)
+    stats = service.stats()
+    assert stats["compiles"] == warm, \
+        f"steady-state recompilation: {stats['compiles']} != {warm}"
+    assert stats["cache_hits"] >= 3 * len(shapes)
+    assert stats["cache_hit_rate"] > 0.5
+
+
+def test_plan_cache_lru_eviction():
+    """cache_size bounds resident plans; eviction is least-recently-USED
+    (a hit refreshes recency), and the counters say so."""
+    rng = np.random.default_rng(7)
+    svc = QRService(policy=BucketingPolicy(tile=16, max_batch=4),
+                    use_kernel=False, cache_size=2)
+
+    def go(shape):
+        svc.submit_many([rng.standard_normal(shape).astype(np.float32)])
+
+    go((32, 32))   # miss, compile  -> cache [A]
+    go((64, 32))   # miss, compile  -> cache [A, B]
+    go((32, 32))   # hit            -> cache [B, A] (A refreshed)
+    go((96, 32))   # miss, compile  -> evicts B -> cache [A, C]
+    s = svc.stats()
+    assert (s["compiles"], s["cache_hits"], s["cache_evictions"]) == (3, 1, 1)
+    assert s["plans_cached"] == 2
+    go((32, 32))   # A survived the eviction (it was refreshed)
+    assert svc.stats()["cache_hits"] == 2
+    go((64, 32))   # B was the LRU victim -> miss, recompile
+    s = svc.stats()
+    assert s["compiles"] == 4 and s["cache_evictions"] == 2
