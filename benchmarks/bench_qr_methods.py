@@ -143,6 +143,23 @@ def sweep(smoke: bool = False) -> list:
                         and solver.config.method in ("tiled", "sharded_tiled"),
                         dispatch_mode=solver.config.dispatch_mode,
                     )
+                    if rec["engine"] and method == "tiled":
+                        # Engine twin rows carry the schedule's modeled
+                        # dispatch/traffic economics next to measured wall
+                        # time (trajectory queries join on these).
+                        from repro.core import engine
+
+                        nb = min(solver.config.block, m, n)
+                        st = engine.schedule_stats(
+                            -(-m // nb), -(-n // nb), nb,
+                            np.dtype(dtype).itemsize)
+                        dm = solver.config.dispatch_mode or st["auto"]
+                        rec["metrics"] = dict(
+                            dispatches=st[dm]["dispatches"],
+                            modeled_dma_bytes=st[dm]["modeled_dma_bytes"],
+                            roofline_dma_bytes=st["roofline_dma_bytes"],
+                            tasks=st["tasks"], levels=st["levels"],
+                        )
                     if method == "sharded_tiled":
                         rec.update(ndevices=jax.local_device_count(),
                                    ndomains=solver.config.ndomains)

@@ -34,6 +34,7 @@ import numpy as np
 
 import jax
 
+from repro.observability import metrics as _obs_metrics
 from repro.serving import BucketingPolicy, QRService
 
 # The mixes are weighted toward repeat shapes (steady-state serving
@@ -89,6 +90,7 @@ def _bench_config(label, mix, waves, *, use_kernel, dispatch_mode, tile,
         policy=BucketingPolicy(tile=tile, max_batch=max_batch),
         use_kernel=use_kernel, dispatch_mode=dispatch_mode)
 
+    dma0 = _obs_metrics.counter_total("engine.modeled_dma_bytes")
     svc = mk_svc()
     svc.submit_many(_mk_wave(mix, rng))  # warm: compiles happen here
     warm_compiles = svc.stats()["compiles"]
@@ -107,6 +109,16 @@ def _bench_config(label, mix, waves, *, use_kernel, dispatch_mode, tile,
     nmat = waves * len(mix)
     flops = waves * sum(_qr_flops(m, n) for m, n in mix)
     mps, base_mps = nmat / wall, nmat / base_wall
+    # Registry snapshot attached to the record: serving dispatch economy
+    # plus the engine's modeled HBM bytes for the programs traced while
+    # this config compiled (engine metrics emit at trace time).
+    metrics = dict(
+        dispatches=stats["dispatches"], compiles=stats["compiles"],
+        padded_slots=stats["padded_slots"],
+        cache_hit_rate=stats["cache_hit_rate"],
+        traced_modeled_dma_bytes=int(
+            _obs_metrics.counter_total("engine.modeled_dma_bytes") - dma0),
+    )
     return dict(
         method=label, m=max(s[0] for s in mix), n=max(s[1] for s in mix),
         dtype="float32",
@@ -123,6 +135,7 @@ def _bench_config(label, mix, waves, *, use_kernel, dispatch_mode, tile,
         dispatches=stats["dispatches"],
         matrices_served=stats["matrices_served"],
         shape_mix=[list(s) for s in mix],
+        metrics=metrics,
     ), stats
 
 

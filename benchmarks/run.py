@@ -74,11 +74,18 @@ def main() -> None:
                   file=sys.stderr)
 
     if qr_records is not None and args.json:
+        from repro.observability import metrics as obs_metrics
+
         with open(args.json, "w") as f:
             # v2: records carry a dispatch_mode field (engine lowering:
-            # "wavefront" / "megakernel" / null on jnp-oracle paths)
+            # "wavefront" / "megakernel" / null on jnp-oracle paths) and
+            # a per-record "metrics" dict on engine/serving rows; the
+            # top-level "metrics" key is the process-global registry
+            # snapshot at the end of the run (planner explain/fallback
+            # counters, engine dispatch/DMA series, serving histograms).
             json.dump({"schema": "qr-bench-v2", "smoke": args.smoke,
-                       "records": qr_records}, f, indent=1)
+                       "records": qr_records,
+                       "metrics": obs_metrics.snapshot()}, f, indent=1)
         print(f"wrote {len(qr_records)} records to {args.json}",
               file=sys.stderr)
     sys.exit(1 if failures else 0)

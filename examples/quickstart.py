@@ -142,6 +142,30 @@ def main():
           f"cache_hit_rate={s['cache_hit_rate']:.2f} "
           f"fill={s['bucket_fill_ratio']:.2f} worst_rec={worst:.2e}")
 
+    # 4c. observability: plan(explain=True) attaches the machine-readable
+    #     routing trail (why THIS method, every fallback by name), and
+    #     the off-by-default tracer records nested spans — exportable as
+    #     Chrome trace JSON — while the always-on metrics registry holds
+    #     planner/engine/serving counters.  Disabled, the layer is free:
+    #     the megakernel jaxpr is identical either way (pinned in tests).
+    from repro import observability as obs
+
+    explained = plan((512, 512), jnp.float32, QRConfig(), explain=True)
+    print(f"{'explain':10s} method={explained.config.method} "
+          f"<- {explained.explain.selected.rule}: "
+          f"{explained.explain.selected.reason}")
+    fb = plan((300, 280), jnp.float32, QRConfig(), backend="cpu",
+              explain=True)
+    print(f"{'explain':10s} (300,280)@cpu -> {fb.config.method} "
+          f"fallbacks={list(fb.explain.fallback_reasons)}")
+    with obs.enabled_scope():                    # tracing + annotations on
+        service.submit_many(mix)
+    print(f"{'tracing':10s} {len(obs.spans())} spans "
+          f"(serving flush: bucketize -> plan -> dispatch -> unpad); "
+          f"obs.export_chrome_trace('trace.json') renders in "
+          f"chrome://tracing, `python -m repro.observability.report "
+          f"--capture DIR` bundles trace + metrics")
+
     # 5. the optimizer primitive: orthogonalize a momentum matrix
     #    (auto config routes this tall-skinny input through TSQR)
     o = orthogonalize(jnp.asarray(rng.standard_normal((256, 64)), jnp.float32),

@@ -186,15 +186,29 @@ def sharded_tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
     p, _ = tile_grid(m, n, tile)
     p_dom = -(-p // d)
     m_pad = d * p_dom * tile
-    a_pad = _pad_rows(a, m_pad)
 
+    from repro.core.tilegraph import merge_levels
+    from repro.observability import metrics as _obs_metrics
+    from repro.observability import trace as _obs_trace
+
+    _obs_metrics.counter("distributed.solves", domains=d, mode=mode).inc()
+    _obs_metrics.counter("distributed.merge_rounds",
+                         domains=d).inc(merge_levels(d) * (2 if (
+                             mode != "r" and refine) else 1))
+    _obs_metrics.gauge("distributed.domain_tile_rows",
+                       domains=d).set(p_dom)
+
+    a_pad = _pad_rows(a, m_pad)
     fn = _sharded_fn(d, tile, mode, bool(use_kernel), bool(refine),
                      dispatch_mode)
     k = min(m, n)
-    if mode == "r":
-        return fn(a_pad)[:k, :n]
-    q, r = fn(a_pad)
-    return q[:m, :k], r[:k, :n]
+    with _obs_trace.span("distgraph.sharded_tiled_qr", domains=d,
+                         shape=f"{m}x{n}", tile=tile,
+                         merge_levels=merge_levels(d)) as sp:
+        if mode == "r":
+            return sp.sync(fn(a_pad)[:k, :n])
+        q, r = fn(a_pad)
+        return sp.sync((q[:m, :k], r[:k, :n]))
 
 
 # -- registry -----------------------------------------------------------------
@@ -212,10 +226,38 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def _resolve_sharded(m: int, n: int, cfg: QRConfig, *, dtype=None
-                     ) -> QRConfig:
+def _resolve_sharded(m: int, n: int, cfg: QRConfig, *, dtype=None,
+                     explain=None) -> QRConfig:
+    from repro.core.plan import RouteDecision
+    from repro.observability import metrics as _metrics
+
     d = effective_domains(m, n, cfg.block, cfg.ndomains)
     tile = min(cfg.block, m, n)
+
+    # Silent-degradation sites: the executor runs fewer domains than the
+    # request (or the device count) implies — surface the concrete cause.
+    avail = jax.local_device_count()
+    wanted = avail if cfg.ndomains is None else min(cfg.ndomains, avail)
+    if d == 1 and wanted > 1:
+        _metrics.counter("planner.fallbacks",
+                         reason="sharded_degraded_to_tiled").inc()
+        if explain is not None:
+            explain.append(RouteDecision(
+                "sharded_degraded_to_tiled", "fallback",
+                f"wide matrix m={m} < n={n} shards to 1 domain"
+                if m < n else
+                f"{wanted} domains requested but the {m}x{n} grid at "
+                f"tile {cfg.block} supports 1 — running the "
+                f"single-device tiled path bit-for-bit"))
+    elif d < wanted:
+        _metrics.counter("planner.fallbacks",
+                         reason="sharded_domains_capped").inc()
+        if explain is not None:
+            explain.append(RouteDecision(
+                "sharded_domains_capped", "fallback",
+                f"{wanted} domains requested, running {d} (capped at "
+                f"the tile-row count and rounded down to a power of "
+                f"two for the butterfly merge)"))
 
     def domain_rows_of(t: int) -> int:
         return _ceil_div(_ceil_div(m, t), d)  # ceil(p / d) tile rows/device
@@ -225,16 +267,22 @@ def _resolve_sharded(m: int, n: int, cfg: QRConfig, *, dtype=None
 
     while domain_grid_side(tile) > _MAX_DOMAIN_GRID and tile < min(m, n):
         tile = min(2 * tile, m, n)
+    if explain is not None and tile != min(cfg.block, m, n):
+        explain.append(RouteDecision(
+            "sharded_tile_grown", "resolved",
+            f"tile grown {cfg.block} -> {tile} to keep each domain's "
+            f"grid side <= {_MAX_DOMAIN_GRID} (task count is "
+            f"O(p q min(p, q)) per domain)"))
     if cfg.dispatch_mode is None and cfg.use_kernel:
         # The engine lowering each domain-local sweep will run: resolve
         # the auto rule on the per-domain tile grid, not the global one,
         # at the planned element width.
-        from repro.core import engine
-        from repro.core.tilegraph import _planned_itemsize
+        from repro.core.tilegraph import (_planned_itemsize,
+                                          _resolve_dispatch_explained)
 
-        cfg = cfg.replace(dispatch_mode=engine.resolve_dispatch_mode(
+        cfg = cfg.replace(dispatch_mode=_resolve_dispatch_explained(
             domain_rows_of(tile), _ceil_div(n, tile), tile,
-            _planned_itemsize(cfg, dtype)))
+            _planned_itemsize(cfg, dtype), explain))
     if d > 1:
         # Across domains the thin Q is always solve-based (CQR2-refined
         # A R^{-1}, like TSQR) — the merge tree never materializes the

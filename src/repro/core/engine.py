@@ -76,15 +76,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import macro_ops
+from repro.observability import metrics as _metrics
+from repro.observability import profiler as _profiler
+from repro.observability import trace as _trace
 
 Array = jax.Array
 
 __all__ = [
     "DISPATCH_MODES",
     "FactorState",
+    "explain_dispatch_mode",
     "factor_tiles",
     "factor_tiles_batched",
     "megakernel_task_table",
+    "modeled_dma_bytes",
     "resolve_dispatch_mode",
     "schedule_stats",
     "wavefront_task_arrays",
@@ -264,34 +269,89 @@ def table_fits(p: int, q: int, budget: int) -> Tuple[bool, int]:
     return nbytes <= budget, nbytes
 
 
+def explain_dispatch_mode(p: int, q: int, nb: int,
+                          itemsize: int = 4) -> Tuple[str, str]:
+    """The ``dispatch_mode=None`` auto rule with its concrete reason:
+    ``(mode, reason)``.  ``"megakernel"`` when the task table fits the
+    scalar-prefetch budget AND the double-buffered tile working set fits
+    VMEM (both limits carried by the ``"macro_ops"`` kernel policy),
+    ``"wavefront"`` otherwise — and the reason string names exactly
+    which budget rejected it."""
+    from repro.core.plan import kernel_table_budget, kernel_vmem_budget
+
+    need = macro_ops.megakernel_vmem_bytes(nb, itemsize)
+    vbudget = kernel_vmem_budget("macro_ops")
+    if need > vbudget:
+        return "wavefront", (
+            f"megakernel working set {need} B > VMEM budget {vbudget} B "
+            f"at nb={nb}, itemsize={itemsize}")
+    tbudget = kernel_table_budget("macro_ops")
+    fits, tbytes = table_fits(p, q, tbudget)
+    if not fits:
+        return "wavefront", (
+            f"({p}, {q}) grid's task table >= {tbytes} B > "
+            f"scalar-prefetch budget {tbudget} B")
+    return "megakernel", (
+        f"task table {tbytes} B <= budget {tbudget} B and working set "
+        f"{need} B <= VMEM budget {vbudget} B")
+
+
 def resolve_dispatch_mode(p: int, q: int, nb: int,
                           itemsize: int = 4) -> str:
     """The ``dispatch_mode=None`` auto rule: ``"megakernel"`` when the
     task table fits the scalar-prefetch budget AND the double-buffered
     tile working set fits VMEM (both limits carried by the
-    ``"macro_ops"`` kernel policy), ``"wavefront"`` otherwise."""
-    from repro.core.plan import kernel_table_budget, kernel_vmem_budget
+    ``"macro_ops"`` kernel policy), ``"wavefront"`` otherwise.  See
+    :func:`explain_dispatch_mode` for the rule with its reasoning."""
+    return explain_dispatch_mode(p, q, nb, itemsize)[0]
 
-    if macro_ops.megakernel_vmem_bytes(nb, itemsize) \
-            > kernel_vmem_budget("macro_ops"):
-        return "wavefront"
-    fits, _ = table_fits(p, q, kernel_table_budget("macro_ops"))
-    return "megakernel" if fits else "wavefront"
+
+@functools.lru_cache(maxsize=None)
+def modeled_dma_bytes(p: int, q: int, nb: int,
+                      itemsize: int = 4) -> Dict[str, int]:
+    """Analytic HBM tile traffic of one ``(p, q)`` factorization, per
+    dispatch mode, from the per-op tile_reads/tile_writes cards
+    (:mod:`repro.kernels.macro_ops`) — the traffic model behind
+    ``benchmarks/bench_kernel_traffic.wavefront_traffic``, totalled.
+
+    ``wavefront``: every task re-fetches its operand tiles from HBM each
+    level.  ``megakernel``: the same minus the fetches the persistent
+    kernel's double buffer serves from the resident copy
+    (:func:`megakernel_reused_reads`).  ``roofline``: compulsory traffic
+    — one read + one write of the whole workspace.  Reflector-state
+    arrays (~nb/tile smaller) are ignored, as in the benchmark.
+    """
+    tile = nb * nb * itemsize
+    eng = 0
+    for by_kind in wavefront_task_arrays(p, q):
+        for kind, idx in by_kind.items():
+            op = macro_ops.MACRO_OPS[kind]
+            eng += idx.shape[0] * (op.tile_reads + op.tile_writes) * tile
+    reused = int(megakernel_reused_reads(p, q).sum())
+    return dict(
+        wavefront=eng,
+        megakernel=eng - reused * tile,
+        roofline=2 * p * q * tile,
+    )
 
 
 def schedule_stats(p: int, q: int, nb: int = 32,
                    itemsize: int = 4) -> Dict[str, object]:
-    """Dispatch counts and table/working-set bytes for both dispatch
-    modes of the ``(p, q)`` schedule — the numbers behind the auto rule
-    and the ``bench_kernel_traffic`` dispatch-reduction row."""
+    """Dispatch counts, table/working-set bytes, and modeled HBM traffic
+    for both dispatch modes of the ``(p, q)`` schedule — the numbers
+    behind the auto rule, the ``bench_kernel_traffic``
+    dispatch-reduction row, and the engine's ``engine.*`` metrics."""
     batches = wavefront_task_arrays(p, q)
     table, nlevels, nslots = megakernel_task_table(p, q)
     ntasks = int((table[:, _COL_KIND] != _NOOP).sum())
+    dma = modeled_dma_bytes(p, q, nb, itemsize)
     return dict(
         p=p, q=q, nb=nb, levels=nlevels, tasks=ntasks,
+        roofline_dma_bytes=dma["roofline"],
         wavefront=dict(
             dispatches=sum(len(b) for b in batches),
             vmem_bytes=macro_ops.engine_vmem_bytes(nb, itemsize),
+            modeled_dma_bytes=dma["wavefront"],
         ),
         megakernel=dict(
             dispatches=1,
@@ -303,6 +363,7 @@ def schedule_stats(p: int, q: int, nb: int = 32,
                 table[:, _COL_REUSE0:_COL_REUSE0 + 3].sum()),
             reused_t_fetches=int(table[:, _COL_REUSET].sum()),
             vmem_bytes=macro_ops.megakernel_vmem_bytes(nb, itemsize),
+            modeled_dma_bytes=dma["megakernel"],
         ),
         auto=resolve_dispatch_mode(p, q, nb, itemsize),
     )
@@ -521,7 +582,8 @@ _DISPATCH = {
 
 
 def _pallas_wavefront(state: FactorState, by_kind: Dict[str, np.ndarray],
-                      nb: int, interpret: bool) -> FactorState:
+                      nb: int, interpret: bool,
+                      level: Optional[int] = None) -> FactorState:
     # Kind order is part of the in-place contract: within a level the
     # only tile shared between kinds is the diagonal, and its two users
     # touch disjoint regions (TSQRT writes the upper triangle, LARFB
@@ -529,7 +591,8 @@ def _pallas_wavefront(state: FactorState, by_kind: Dict[str, np.ndarray],
     # the canonical order just keeps dispatch deterministic.
     for kind in _KIND_ORDER:
         if kind in by_kind:
-            state = _DISPATCH[kind](state, by_kind[kind], nb, interpret)
+            with _profiler.annotate(_profiler.kernel_label(kind, level)):
+                state = _DISPATCH[kind](state, by_kind[kind], nb, interpret)
     return state
 
 
@@ -806,11 +869,14 @@ def _factor_impl(tiles: Array, p: int, q: int, nb: int, use_kernel: bool,
         jnp.zeros((p, r, nb), dt),
     )
     if use_kernel and dispatch_mode == "megakernel":
-        return _dispatch_megakernel(state, p, q, nb, interpret)
-    step = (functools.partial(_pallas_wavefront, nb=nb, interpret=interpret)
-            if use_kernel else _jnp_wavefront)
-    for by_kind in wavefront_task_arrays(p, q):
-        state = step(state, by_kind)
+        with _profiler.annotate(_profiler.megakernel_label(p, q)):
+            return _dispatch_megakernel(state, p, q, nb, interpret)
+    for lv, by_kind in enumerate(wavefront_task_arrays(p, q)):
+        if use_kernel:
+            state = _pallas_wavefront(state, by_kind, nb, interpret, level=lv)
+        else:
+            with _profiler.annotate(f"wavefront@L{lv}"):
+                state = _jnp_wavefront(state, by_kind)
     return state
 
 
@@ -849,7 +915,8 @@ def _factor_batched_impl(tiles: Array, p: int, q: int, nb: int,
             jnp.zeros((batch, p, r, nb, nb), dt),
             jnp.zeros((batch, p, r, nb), dt),
         )
-        return _dispatch_megakernel_batched(state, p, q, nb, interpret)
+        with _profiler.annotate(_profiler.megakernel_label(p, q, batch)):
+            return _dispatch_megakernel_batched(state, p, q, nb, interpret)
     return jax.vmap(
         lambda w: _factor_impl(w, p, q, nb, use_kernel, interpret,
                                dispatch_mode))(tiles)
@@ -858,6 +925,39 @@ def _factor_batched_impl(tiles: Array, p: int, q: int, nb: int,
 _factor_batched_jit = jax.jit(_factor_batched_impl,
                               static_argnums=(1, 2, 3, 4, 5, 6),
                               donate_argnums=(0,))
+
+
+def _emit_factor_metrics(tiles: Array, p: int, q: int, nb: int, mode: str,
+                         use_kernel: bool, batch: int = 1) -> None:
+    """Record one factor call in the ``engine.*`` metric series.
+
+    Runs at Python-call time — which, when the entry point is reached
+    from inside an outer ``jax.jit`` trace (``tiled_qr``, the serving
+    bucket solvers), is *trace* time: the call happens once per compiled
+    program, not once per execution.  The ``phase`` label makes that
+    explicit ("trace" = counted at compile, replays are invisible;
+    "execute" = counted per eager call)."""
+    phase = "trace" if isinstance(tiles, jax.core.Tracer) else "execute"
+    itemsize = jnp.dtype(tiles.dtype).itemsize
+    kernel = "pallas" if use_kernel else "jnp"
+    ndisp = 1 if (use_kernel and mode == "megakernel") else (
+        sum(len(b) for b in wavefront_task_arrays(p, q)) * batch
+        if use_kernel else 0)
+    ntasks = task_count(p, q) * batch
+    dma = modeled_dma_bytes(p, q, nb, itemsize)
+    dma_mode = dma[mode] if use_kernel and mode in dma else dma["wavefront"]
+    _metrics.counter("engine.factor_calls", mode=mode, kernel=kernel,
+                     phase=phase).inc()
+    _metrics.counter("engine.matrices", mode=mode, phase=phase).inc(batch)
+    _metrics.counter("engine.dispatches", mode=mode, phase=phase).inc(ndisp)
+    _metrics.counter("engine.tasks", mode=mode, phase=phase).inc(ntasks)
+    _metrics.counter("engine.modeled_dma_bytes", mode=mode,
+                     phase=phase).inc(dma_mode * batch)
+    _metrics.counter("engine.roofline_dma_bytes", mode=mode,
+                     phase=phase).inc(dma["roofline"] * batch)
+    if use_kernel and mode == "megakernel":
+        _metrics.gauge("engine.table_bytes", grid=f"{p}x{q}").set(
+            megakernel_task_table(p, q)[0].nbytes)
 
 
 def factor_tiles(tiles: Array, *, p: int, q: int, nb: int,
@@ -887,8 +987,11 @@ def factor_tiles(tiles: Array, *, p: int, q: int, nb: int,
     mode = _check_dispatch(tiles.dtype, p, q, nb, use_kernel, dispatch_mode)
     if interpret is None:
         interpret = macro_ops.default_interpret()
-    return _factor_jit(tiles, p, q, nb, bool(use_kernel), bool(interpret),
-                       mode)
+    _emit_factor_metrics(tiles, p, q, nb, mode, bool(use_kernel))
+    with _trace.span("engine.factor_tiles", mode=mode, grid=f"{p}x{q}",
+                     nb=nb, kernel=bool(use_kernel)) as sp:
+        return sp.sync(_factor_jit(tiles, p, q, nb, bool(use_kernel),
+                                   bool(interpret), mode))
 
 
 def _check_dispatch(dtype, p: int, q: int, nb: int, use_kernel: bool,
@@ -969,5 +1072,10 @@ def factor_tiles_batched(tiles: Array, *, p: int, q: int, nb: int,
                            batched=True)
     if interpret is None:
         interpret = macro_ops.default_interpret()
-    return _factor_batched_jit(tiles, p, q, nb, bool(use_kernel),
-                               bool(interpret), mode)
+    _emit_factor_metrics(tiles, p, q, nb, mode, bool(use_kernel),
+                         batch=int(tiles.shape[0]))
+    with _trace.span("engine.factor_tiles_batched", mode=mode,
+                     grid=f"{p}x{q}", nb=nb, batch=int(tiles.shape[0]),
+                     kernel=bool(use_kernel)) as sp:
+        return sp.sync(_factor_batched_jit(tiles, p, q, nb, bool(use_kernel),
+                                           bool(interpret), mode))

@@ -77,11 +77,13 @@ one number (:data:`DEFAULT_VMEM_BUDGET`, via :func:`kernel_vmem_budget`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.observability import metrics as _metrics
 
 Array = jax.Array
 
@@ -90,6 +92,8 @@ __all__ = [
     "MethodSpec",
     "KernelPolicy",
     "QRSolver",
+    "PlanExplain",
+    "RouteDecision",
     "plan",
     "select_method",
     "register_method",
@@ -263,6 +267,64 @@ class KernelPolicy:
     table_budget: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class RouteDecision:
+    """One machine-readable routing (or resolve) decision.
+
+    rule:    stable slug — the routing rule or fallback reason
+             ("tsqr_tall_skinny", "tiled_min_dim_cpu_floor",
+             "megakernel_over_budget", ...)
+    outcome: "selected" (this rule chose the method), "rejected" (rule
+             evaluated and declined), "fallback" (a silent-degradation
+             site fired — also counted in ``planner.fallbacks``), or
+             "resolved" (a resolve hook recorded a concrete choice)
+    reason:  the concrete threshold/budget arithmetic that fired
+    """
+
+    rule: str
+    outcome: str
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanExplain:
+    """Why :func:`plan` chose what it chose — ``plan(..., explain=True)``.
+
+    ``decisions`` holds every rule evaluated, in evaluation order;
+    ``fallback_reasons`` are the ``rule`` slugs of the fallback-outcome
+    decisions (the silent degradations the planner now surfaces — each
+    also increments the ``planner.fallbacks{reason=...}`` counter).
+    All fields are hashable; the record rides on the solver without
+    affecting its equality or jit-static identity.
+    """
+
+    shape: Tuple[int, int]
+    dtype: str
+    backend: str
+    ndevices: int
+    requested_method: str
+    method: str
+    use_kernel: bool
+    dispatch_mode: Optional[str]
+    decisions: Tuple[RouteDecision, ...]
+    fallback_reasons: Tuple[str, ...]
+
+    def decision(self, rule: str) -> Optional[RouteDecision]:
+        """The first decision recorded for ``rule`` (None if absent)."""
+        for d in self.decisions:
+            if d.rule == rule:
+                return d
+        return None
+
+    @property
+    def selected(self) -> Optional[RouteDecision]:
+        """The decision that chose the method."""
+        for d in self.decisions:
+            if d.outcome == "selected":
+                return d
+        return None
+
+
 _REGISTRY: Dict[str, MethodSpec] = {}
 _KERNEL_POLICIES: Dict[str, KernelPolicy] = {}
 _BUILTINS_LOADED = False
@@ -378,6 +440,117 @@ def _kernel_fits(spec: MethodSpec, m: int, n: int, cfg: QRConfig,
     return est * scale <= kernel_vmem_budget(spec.kernel_policy)
 
 
+def _route(shape, dtype, config: QRConfig, backend: Optional[str],
+           ndevices: Optional[int]) -> Tuple[str, List[RouteDecision]]:
+    """The routing table with its reasoning: ``(method, decisions)``.
+
+    Evaluates the same rules as always (behavior unchanged); every rule
+    evaluated is recorded as a :class:`RouteDecision`, and the
+    silent-degradation sites (the CPU tiled floor here; dispatch-mode
+    and domain-count degradations in the resolve hooks) additionally
+    emit ``outcome="fallback"`` decisions + ``planner.fallbacks``
+    counters.
+    """
+    _ensure_builtins()
+    dec: List[RouteDecision] = []
+    if config.method != "auto":
+        dec.append(RouteDecision(
+            "explicit", "selected",
+            f"config.method={config.method!r} bypasses auto routing"))
+        return config.method, dec
+    m, n = int(shape[-2]), int(shape[-1])
+    backend = jax.default_backend() if backend is None else backend
+    ndevices = jax.local_device_count() if ndevices is None else int(ndevices)
+    aspect = m / n if n else float("inf")
+
+    tspec = _REGISTRY.get("tsqr")
+    if (tspec is not None and config.mode != "full" and n >= 1 and m >= 8
+            and m >= tspec.min_aspect * n):
+        dec.append(RouteDecision(
+            "tsqr_tall_skinny", "selected",
+            f"aspect {aspect:.2f} >= {tspec.min_aspect:g} "
+            f"({m}x{n}, mode={config.mode!r})"))
+        return "tsqr", dec
+    if tspec is not None:
+        dec.append(RouteDecision(
+            "tsqr_tall_skinny", "rejected",
+            f"mode='full' needs full Q (tsqr is thin-only)"
+            if config.mode == "full" else
+            f"aspect {aspect:.2f} < {tspec.min_aspect:g} (or m={m} < 8)"))
+
+    tiled_floor = _TILED_MIN_DIM_CPU if backend == "cpu" else _TILED_MIN_DIM
+    near_square = (min(m, n) >= tiled_floor
+                   and max(m, n) < _TILED_MAX_ASPECT * min(m, n))
+    # Silent-degradation site: shapes that would route tiled on an
+    # accelerator but sit under the measured CPU crossover floor.
+    if (backend == "cpu" and "tiled" in _REGISTRY
+            and _TILED_MIN_DIM <= min(m, n) < _TILED_MIN_DIM_CPU
+            and max(m, n) < _TILED_MAX_ASPECT * min(m, n)
+            and max(m, n) <= _TILED_MAX_DIM):
+        _metrics.counter("planner.fallbacks",
+                         reason="tiled_min_dim_cpu_floor").inc()
+        dec.append(RouteDecision(
+            "tiled_min_dim_cpu_floor", "fallback",
+            f"min dim {min(m, n)} >= {_TILED_MIN_DIM} routes tiled "
+            f"off-CPU, but < CPU floor {_TILED_MIN_DIM_CPU} (measured "
+            f"LAPACK geqrf crossover) — falling through to blocked"))
+    if "tiled" in _REGISTRY and near_square and max(m, n) <= _TILED_MAX_DIM:
+        dec.append(RouteDecision(
+            "tiled_near_square", "selected",
+            f"min dim {min(m, n)} >= floor {tiled_floor} "
+            f"({backend}), aspect {max(m, n) / min(m, n):.2f} < "
+            f"{_TILED_MAX_ASPECT:g}, max dim {max(m, n)} <= "
+            f"{_TILED_MAX_DIM}"))
+        return "tiled", dec
+    if "tiled" in _REGISTRY:
+        dec.append(RouteDecision(
+            "tiled_near_square", "rejected",
+            f"min dim {min(m, n)} < floor {tiled_floor} ({backend})"
+            if min(m, n) < tiled_floor else
+            f"aspect {max(m, n) / min(m, n):.2f} >= {_TILED_MAX_ASPECT:g}"
+            if max(m, n) >= _TILED_MAX_ASPECT * min(m, n) else
+            f"max dim {max(m, n)} > single-device ceiling {_TILED_MAX_DIM}"))
+
+    sharded_ceiling = _TILED_MAX_DIM * min(ndevices, _SHARDED_MAX_DOM_FACTOR)
+    if ("sharded_tiled" in _REGISTRY and near_square and config.mode != "full"
+            and len(shape) == 2  # no batched support (shard_map under vmap)
+            and m >= n and ndevices > 1
+            and max(m, n) <= sharded_ceiling):
+        dec.append(RouteDecision(
+            "sharded_past_ceiling", "selected",
+            f"near-square {m}x{n} <= sharded ceiling {sharded_ceiling} "
+            f"({ndevices} devices x {_TILED_MAX_DIM})"))
+        return "sharded_tiled", dec
+    if "sharded_tiled" in _REGISTRY and near_square and max(m, n) > _TILED_MAX_DIM:
+        dec.append(RouteDecision(
+            "sharded_past_ceiling", "rejected",
+            f"single device available (ndevices={ndevices})"
+            if ndevices <= 1 else
+            f"max dim {max(m, n)} > sharded ceiling {sharded_ceiling}"
+            if max(m, n) > sharded_ceiling else
+            "batched input or wide matrix or mode='full'"))
+
+    gspec = _REGISTRY.get("geqrf_ht")
+    if (backend == "tpu" and gspec is not None and config.use_kernel is not False
+            and _kernel_fits(gspec, m, n, config, dtype)):
+        dec.append(RouteDecision(
+            "tpu_kernel_panel_fits", "selected",
+            f"backend=tpu and geqrf_ht panel working set fits VMEM "
+            f"budget {kernel_vmem_budget(gspec.kernel_policy)}"))
+        return "geqrf_ht", dec
+    if min(m, n) <= config.block:
+        dec.append(RouteDecision(
+            "single_panel", "selected",
+            f"min dim {min(m, n)} <= block {config.block} — one "
+            f"unblocked panel (geqr2_ht)"))
+        return "geqr2_ht", dec
+    dec.append(RouteDecision(
+        "blocked_default", "selected",
+        f"no specialized rule matched {m}x{n} on {backend} — blocked "
+        f"geqrf_ht default"))
+    return "geqrf_ht", dec
+
+
 def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = None,
                   ndevices: Optional[int] = None) -> str:
     """The ``method="auto"`` routing table (trailing two dims of shape).
@@ -387,7 +560,8 @@ def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = No
     2. large near-square (256 <= dims <= 2048, aspect < 4) -> ``tiled``
        task-graph (cross-panel wavefront parallelism); on CPU the floor
        is 512 — below that multithreaded LAPACK geqrf wins and the
-       request falls through to rule 6;
+       request falls through to rule 6 (surfaced as the
+       ``tiled_min_dim_cpu_floor`` fallback in the explain record);
     3. near-square but past the single-device tiled ceiling, with more
        than one device available (``ndevices``, default
        ``jax.local_device_count()``) -> ``sharded_tiled``: per-device
@@ -397,47 +571,27 @@ def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = No
        ``geqrf_ht``;
     5. single-panel problems (min(m, n) <= block) -> unblocked ``geqr2_ht``;
     6. otherwise blocked ``geqrf_ht``.
+
+    ``plan(..., explain=True)`` returns the full decision trail as a
+    :class:`PlanExplain` record on the solver.
     """
-    _ensure_builtins()
-    if config.method != "auto":
-        return config.method
-    m, n = int(shape[-2]), int(shape[-1])
-    backend = jax.default_backend() if backend is None else backend
-    ndevices = jax.local_device_count() if ndevices is None else int(ndevices)
-    tspec = _REGISTRY.get("tsqr")
-    if (tspec is not None and config.mode != "full" and n >= 1 and m >= 8
-            and m >= tspec.min_aspect * n):
-        return "tsqr"
-    tiled_floor = _TILED_MIN_DIM_CPU if backend == "cpu" else _TILED_MIN_DIM
-    near_square = (min(m, n) >= tiled_floor
-                   and max(m, n) < _TILED_MAX_ASPECT * min(m, n))
-    if "tiled" in _REGISTRY and near_square and max(m, n) <= _TILED_MAX_DIM:
-        return "tiled"
-    if ("sharded_tiled" in _REGISTRY and near_square and config.mode != "full"
-            and len(shape) == 2  # no batched support (shard_map under vmap)
-            and m >= n and ndevices > 1
-            and max(m, n) <= _TILED_MAX_DIM * min(ndevices,
-                                                  _SHARDED_MAX_DOM_FACTOR)):
-        return "sharded_tiled"
-    gspec = _REGISTRY.get("geqrf_ht")
-    if (backend == "tpu" and gspec is not None and config.use_kernel is not False
-            and _kernel_fits(gspec, m, n, config, dtype)):
-        return "geqrf_ht"
-    if min(m, n) <= config.block:
-        return "geqr2_ht"
-    return "geqrf_ht"
+    return _route(shape, dtype, config, backend, ndevices)[0]
 
 
 def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
          backend: Optional[str] = None,
-         ndevices: Optional[int] = None) -> "QRSolver":
+         ndevices: Optional[int] = None,
+         explain: bool = False) -> "QRSolver":
     """Resolve ``(shape, dtype, config)`` to a concrete :class:`QRSolver`.
 
     ``shape`` may carry leading batch dims; planning uses the trailing
     matrix dims and the solver vmaps over the rest.  ``backend`` overrides
     ``jax.default_backend()`` for the kernel policy, ``ndevices``
     overrides ``jax.local_device_count()`` for the sharded routing (both
-    useful in tests).
+    useful in tests).  ``explain=True`` attaches a :class:`PlanExplain`
+    record to the solver: the full routing-decision trail, the resolved
+    dispatch mode, and every fallback reason — machine-readable, and
+    mirrored into the ``planner.*`` metrics either way.
     """
     _ensure_builtins()
     cfg = QRConfig() if config is None else config
@@ -447,7 +601,7 @@ def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
     batched = len(shape) > 2
     backend = jax.default_backend() if backend is None else backend
 
-    name = select_method(shape, dtype, cfg, backend=backend, ndevices=ndevices)
+    name, decisions = _route(shape, dtype, cfg, backend, ndevices)
     spec = get_method(name)
 
     if batched and not spec.batched:
@@ -468,9 +622,28 @@ def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
 
     resolved = dataclasses.replace(cfg, method=name, use_kernel=bool(use_kernel))
     if spec.resolve is not None:
-        resolved = spec.resolve(m, n, resolved, dtype=np.dtype(dtype))
+        # Resolve hooks may append RouteDecisions (dispatch-mode choices,
+        # domain degradations); hooks predating the kwarg still work.
+        try:
+            resolved = spec.resolve(m, n, resolved, dtype=np.dtype(dtype),
+                                    explain=decisions)
+        except TypeError:
+            resolved = spec.resolve(m, n, resolved, dtype=np.dtype(dtype))
+    _metrics.counter("planner.plans", method=name).inc()
+    record = None
+    if explain:
+        record = PlanExplain(
+            shape=(m, n), dtype=str(np.dtype(dtype)), backend=backend,
+            ndevices=(jax.local_device_count() if ndevices is None
+                      else int(ndevices)),
+            requested_method=cfg.method, method=name,
+            use_kernel=bool(use_kernel),
+            dispatch_mode=resolved.dispatch_mode,
+            decisions=tuple(decisions),
+            fallback_reasons=tuple(d.rule for d in decisions
+                                   if d.outcome == "fallback"))
     return QRSolver(shape=(m, n), dtype=np.dtype(dtype), config=resolved,
-                    spec=spec)
+                    spec=spec, explain=record)
 
 
 # ---------------------------------------------------------------------------
@@ -508,13 +681,18 @@ class QRSolver:
 
     ``config`` is fully resolved (concrete method / kernel flag / nblocks);
     the solver is hashable and may be closed over or passed as a
-    ``jax.jit`` static argument.
+    ``jax.jit`` static argument.  ``explain`` (populated by
+    ``plan(..., explain=True)``) carries the :class:`PlanExplain`
+    decision trail; it is excluded from equality/hashing so explained
+    and unexplained solvers are jit-cache-identical.
     """
 
     shape: Tuple[int, int]
     dtype: np.dtype
     config: QRConfig
     spec: MethodSpec
+    explain: Optional[PlanExplain] = dataclasses.field(default=None,
+                                                       compare=False)
 
     # -- internals ---------------------------------------------------------
 

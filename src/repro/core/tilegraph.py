@@ -348,7 +348,28 @@ def _planned_itemsize(cfg, dtype) -> int:
     return np.dtype(dtype).itemsize if dtype is not None else 4
 
 
-def _resolve_tiled(m: int, n: int, cfg: QRConfig, *, dtype=None) -> QRConfig:
+def _resolve_dispatch_explained(p: int, q: int, nb: int, itemsize: int,
+                                explain) -> str:
+    """Resolve the engine dispatch mode, surfacing megakernel-over-budget
+    rejections as a planner fallback (counter + explain decision) —
+    shared by the tiled and sharded resolve hooks."""
+    from repro.core.plan import RouteDecision
+    from repro.observability import metrics as _metrics
+
+    mode, why = engine.explain_dispatch_mode(p, q, nb, itemsize)
+    if mode == "wavefront":
+        _metrics.counter("planner.fallbacks",
+                         reason="megakernel_over_budget").inc()
+        if explain is not None:
+            explain.append(RouteDecision("megakernel_over_budget",
+                                         "fallback", why))
+    elif explain is not None:
+        explain.append(RouteDecision("dispatch_mode_auto", "resolved", why))
+    return mode
+
+
+def _resolve_tiled(m: int, n: int, cfg: QRConfig, *, dtype=None,
+                   explain=None) -> QRConfig:
     # cfg.block doubles as the tile size; never exceed the matrix itself.
     cfg = cfg.replace(block=min(cfg.block, m, n))
     if cfg.dispatch_mode is None and cfg.use_kernel:
@@ -357,8 +378,8 @@ def _resolve_tiled(m: int, n: int, cfg: QRConfig, *, dtype=None) -> QRConfig:
         # at the planned element width — fp64 doubles the working set);
         # the jnp-oracle path has no kernel dispatch — mode stays None.
         p, q = tile_grid(m, n, cfg.block)
-        cfg = cfg.replace(dispatch_mode=engine.resolve_dispatch_mode(
-            p, q, cfg.block, _planned_itemsize(cfg, dtype)))
+        cfg = cfg.replace(dispatch_mode=_resolve_dispatch_explained(
+            p, q, cfg.block, _planned_itemsize(cfg, dtype), explain))
     return cfg
 
 

@@ -200,15 +200,29 @@ def default_nblocks(m: int, n: int) -> int:
     return max(nb, 1)
 
 
-def _resolve_tsqr(m: int, n: int, cfg: QRConfig, *, dtype=None) -> QRConfig:
+def _resolve_tsqr(m: int, n: int, cfg: QRConfig, *, dtype=None,
+                  explain=None) -> QRConfig:
     del dtype  # tree shape is element-width independent
     nb = cfg.nblocks if cfg.nblocks is not None else default_nblocks(m, n)
     if m % nb != 0:
         raise ValueError(f"m={m} not divisible by nblocks={nb}")
+    if explain is not None and cfg.nblocks is None:
+        from repro.core.plan import RouteDecision
+
+        explain.append(RouteDecision(
+            "tsqr_nblocks", "resolved",
+            f"nblocks={nb} (largest divisor of m={m} in [2, 8] scaled "
+            f"by aspect) — merge tree depth {(nb - 1).bit_length()}"))
     return cfg.replace(nblocks=nb)
 
 
 def _solve_tsqr(a: Array, cfg: QRConfig):
+    from repro.observability import metrics as _obs_metrics
+
+    _obs_metrics.counter("tsqr.solves", nblocks=cfg.nblocks,
+                         mode=cfg.mode).inc()
+    _obs_metrics.gauge("tsqr.tree_depth", nblocks=cfg.nblocks).set(
+        (cfg.nblocks - 1).bit_length())
     qr_block = min(cfg.block, a.shape[1])
     if cfg.mode == "r":
         r = tsqr_r(a, nblocks=cfg.nblocks, qr_block=qr_block,

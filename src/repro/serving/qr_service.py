@@ -35,6 +35,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import itertools
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -42,12 +44,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.observability import metrics as _metrics
+from repro.observability import trace as _trace
 from repro.serving.bucketing import (
     BucketKey, BucketingPolicy, bucketize, pad_batch)
 
 Array = jax.Array
 
 __all__ = ["QRRequest", "QRResult", "QRService"]
+
+# Distinguishes each QRService instance's series in the process-global
+# metrics registry, so a fresh service starts from zero counts.
+_SERVICE_IDS = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +65,7 @@ class QRRequest:
     rid: int
     a: np.ndarray
     mode: str
+    t_submit: float = 0.0      # monotonic clock at submit (queue-wait base)
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -151,7 +160,21 @@ class QRService:
             = collections.OrderedDict()
         self._pending: List[QRRequest] = []
         self._next_rid = 0
-        self._stats = collections.Counter()
+        # Counters live in the process-global metrics registry under this
+        # instance's ``service`` label; stats() is a view over them.
+        self._sid = f"qr{next(_SERVICE_IDS)}"
+
+    # ---------------------------------------------------- metrics plumbing
+
+    def _count(self, name: str, amount: int = 1) -> None:
+        _metrics.counter(f"serving.{name}", service=self._sid).inc(amount)
+
+    def _count_value(self, name: str) -> int:
+        return int(_metrics.counter_value(f"serving.{name}", service=self._sid))
+
+    def _observe(self, name: str, value: float, **labels: object) -> None:
+        _metrics.histogram(f"serving.{name}", service=self._sid,
+                           **labels).observe(value)
 
     # ------------------------------------------------------------ intake
 
@@ -167,8 +190,9 @@ class QRService:
                 f"serving modes are 'reduced' and 'r', got {mode!r}")
         rid = self._next_rid
         self._next_rid += 1
-        self._pending.append(QRRequest(rid=rid, a=arr, mode=mode))
-        self._stats["requests"] += 1
+        self._pending.append(QRRequest(rid=rid, a=arr, mode=mode,
+                                       t_submit=time.monotonic()))
+        self._count("requests")
         return rid
 
     def submit_many(self, arrays: Sequence, mode: str = "reduced"
@@ -188,14 +212,14 @@ class QRService:
         plan = self._plans.get(cache_key)
         if plan is not None:
             self._plans.move_to_end(cache_key)
-            self._stats["cache_hits"] += 1
+            self._count("cache_hits")
             return plan
-        self._stats["cache_misses"] += 1
+        self._count("cache_misses")
         plan = self._build_plan(key, batch)
         self._plans[cache_key] = plan
         if len(self._plans) > self.cache_size:
             self._plans.popitem(last=False)
-            self._stats["cache_evictions"] += 1
+            self._count("cache_evictions")
         return plan
 
     def _build_plan(self, key: BucketKey, batch: int) -> _BucketPlan:
@@ -221,8 +245,10 @@ class QRService:
             donate_argnums=(0,))
         shape = jax.ShapeDtypeStruct((batch, key.m, key.n),
                                      np.dtype(key.dtype))
+        t0 = time.monotonic()
         compiled = fn.lower(shape).compile()
-        self._stats["compiles"] += 1
+        self._count("compiles")
+        self._observe("compile_seconds", time.monotonic() - t0)
         return _BucketPlan(key=key, batch=batch, grid=(p, q), nb=nb,
                            dispatch_mode=dispatch_mode if self.use_kernel
                            else None, fn=compiled)
@@ -260,33 +286,50 @@ class QRService:
         donated into its executable (compiled with ``donate_argnums``),
         so steady state holds one in-flight compute and one in-flight
         transfer, not a growing buffer population."""
-        work = self._chunks()
+        with _trace.span("serving.bucketize", service=self._sid):
+            work = self._chunks()
         if not work:
             return {}
-        plans = [self._plan_for(key, pad_batch(len(chunk),
-                                               max_batch=self.policy.max_batch))
-                 for key, chunk in work]
+        with _trace.span("serving.plan", service=self._sid,
+                         chunks=len(work)):
+            plans = [self._plan_for(
+                key, pad_batch(len(chunk), max_batch=self.policy.max_batch))
+                for key, chunk in work]
         staged = self._stage(work[0][0], work[0][1], plans[0].batch)
         outs = []
         for i, (plan, (key, chunk)) in enumerate(zip(plans, work)):
             nxt = (self._stage(work[i + 1][0], work[i + 1][1],
                                plans[i + 1].batch)
                    if i + 1 < len(work) else None)
-            outs.append(plan.fn(staged))  # async; donates the staged buffer
-            self._stats["dispatches"] += 1
-            self._stats["matrices_served"] += len(chunk)
-            self._stats["padded_slots"] += plan.batch - len(chunk)
+            with _trace.span("serving.dispatch", service=self._sid,
+                             bucket=f"{key.m}x{key.n}", batch=plan.batch,
+                             fill=len(chunk)):
+                outs.append(plan.fn(staged))  # async; donates staged buffer
+            self._count("dispatches")
+            self._count("matrices_served", len(chunk))
+            self._count("padded_slots", plan.batch - len(chunk))
+            now = time.monotonic()
+            for req in chunk:
+                self._observe("queue_wait_seconds", now - req.t_submit)
+            self._observe("bucket_fill", len(chunk) / plan.batch)
+            real = sum(m * n for m, n in (r.shape for r in chunk))
+            waste = 1.0 - real / (plan.batch * key.m * key.n)
+            self._observe("padding_waste", waste, bucket=f"{key.m}x{key.n}")
             staged = nxt
         results: Dict[int, QRResult] = {}
-        for (key, chunk), out in zip(work, outs):
-            for s, req in enumerate(chunk):
-                m, n = req.shape
-                k = min(m, n)
-                if key.mode == "r":
-                    q_mat, r_mat = None, out[0][s, :k, :n]
-                else:
-                    q_mat, r_mat = out[0][s, :m, :k], out[1][s, :k, :n]
-                results[req.rid] = QRResult(rid=req.rid, q=q_mat, r=r_mat)
+        with _trace.span("serving.unpad", service=self._sid) as sp:
+            for (key, chunk), out in zip(work, outs):
+                sp.sync(out)
+                now = time.monotonic()
+                for s, req in enumerate(chunk):
+                    m, n = req.shape
+                    k = min(m, n)
+                    if key.mode == "r":
+                        q_mat, r_mat = None, out[0][s, :k, :n]
+                    else:
+                        q_mat, r_mat = out[0][s, :m, :k], out[1][s, :k, :n]
+                    results[req.rid] = QRResult(rid=req.rid, q=q_mat, r=r_mat)
+                    self._observe("latency_seconds", now - req.t_submit)
         return results
 
     # -------------------------------------------------------------- stats
@@ -295,20 +338,25 @@ class QRService:
         """Serving counters: cache behavior, dispatch economy, padding
         waste.  ``bucket_fill_ratio`` is matrices served over batch slots
         dispatched (1.0 = every slot carried a real request);
-        ``cache_hit_rate`` is plan-cache hits over lookups."""
-        s = self._stats
-        slots = s["matrices_served"] + s["padded_slots"]
-        lookups = s["cache_hits"] + s["cache_misses"]
+        ``cache_hit_rate`` is plan-cache hits over lookups.
+
+        Counters are a view over this instance's ``serving.*`` series in
+        the process-global metrics registry (``service=<id>`` label)."""
+        served = self._count_value("matrices_served")
+        padded = self._count_value("padded_slots")
+        hits = self._count_value("cache_hits")
+        slots = served + padded
+        lookups = hits + self._count_value("cache_misses")
         return dict(
-            requests=int(s["requests"]),
-            matrices_served=int(s["matrices_served"]),
-            dispatches=int(s["dispatches"]),
-            compiles=int(s["compiles"]),
-            cache_hits=int(s["cache_hits"]),
-            cache_misses=int(s["cache_misses"]),
-            cache_evictions=int(s["cache_evictions"]),
+            requests=self._count_value("requests"),
+            matrices_served=served,
+            dispatches=self._count_value("dispatches"),
+            compiles=self._count_value("compiles"),
+            cache_hits=hits,
+            cache_misses=self._count_value("cache_misses"),
+            cache_evictions=self._count_value("cache_evictions"),
             plans_cached=len(self._plans),
-            padded_slots=int(s["padded_slots"]),
-            bucket_fill_ratio=(s["matrices_served"] / slots) if slots else 1.0,
-            cache_hit_rate=(s["cache_hits"] / lookups) if lookups else 0.0,
+            padded_slots=padded,
+            bucket_fill_ratio=(served / slots) if slots else 1.0,
+            cache_hit_rate=(hits / lookups) if lookups else 0.0,
         )

@@ -252,6 +252,31 @@ def test_megakernel_issues_single_pallas_call(p, q):
     assert counted("wavefront") == stats["wavefront"]["dispatches"]
 
 
+def test_observability_leaves_megakernel_jaxpr_pinned():
+    """The observability layer's zero-cost guarantee at the IR level:
+    the public ``factor_tiles`` megakernel path lowers to the IDENTICAL
+    jaxpr whether observability is disabled (the default) or fully
+    enabled — profiler annotations are ``jax.named_scope`` metadata and
+    span/metric emission is host-side, so neither adds an equation —
+    and it stays exactly one pallas_call either way."""
+    from repro import observability as obs
+
+    p, q, nb = 3, 3, 8
+    ws = jax.ShapeDtypeStruct((p, q, nb, nb), jnp.float32)
+
+    def lower():
+        return jax.make_jaxpr(
+            lambda w: engine.factor_tiles(
+                w, p=p, q=q, nb=nb, use_kernel=True, interpret=True,
+                dispatch_mode="megakernel"))(ws)
+
+    disabled = lower()
+    with obs.enabled_scope():
+        enabled = lower()
+    assert str(disabled) == str(enabled)
+    assert _pallas_call_count(disabled) == _pallas_call_count(enabled) == 1
+
+
 @pytest.mark.parametrize("batch", [2, 4])
 def test_batched_megakernel_issues_single_pallas_call(batch):
     """The serving acceptance property: a whole bucket — B stacked

@@ -183,7 +183,7 @@ def test_auto_skips_kernel_when_panel_exceeds_vmem():
 # The full auto routing table in one place: (shape, backend, ndevices)
 # -> method.  ndevices=1 is the single-device column; the >1 columns
 # exercise the device-count-aware sharded_tiled routing.
-@pytest.mark.parametrize("shape,backend,ndevices,expected", [
+_ROUTING_TABLE = [
     ((1024, 32), "cpu", 1, "tsqr"),        # tall-skinny beats everything
     ((1024, 256), "cpu", 1, "tsqr"),       # exactly 4:1 is still TSQR
     ((512, 512), "cpu", 1, "tiled"),       # large near-square -> task graph
@@ -212,10 +212,74 @@ def test_auto_skips_kernel_when_panel_exceeds_vmem():
     ((2049, 1024), "cpu", 1, "geqrf_ht"),    # no second device, no sharding
     ((1024, 2049), "cpu", 8, "geqrf_ht"),    # wide: row-sharding won't help
     ((40000, 16384), "cpu", 8, "geqrf_ht"),  # past the 8-device ceiling too
-])
+]
+
+
+@pytest.mark.parametrize("shape,backend,ndevices,expected", _ROUTING_TABLE)
 def test_auto_routing_table(shape, backend, ndevices, expected):
     assert select_method(shape, jnp.float32, QRConfig(),
                          backend=backend, ndevices=ndevices) == expected
+
+
+@pytest.mark.parametrize("shape,backend,ndevices,expected", _ROUTING_TABLE)
+def test_auto_routing_table_explain(shape, backend, ndevices, expected):
+    """Every routing-table decision is explainable: ``plan(explain=True)``
+    attaches a PlanExplain whose selected decision names the winning rule
+    with a non-empty machine-readable reason, and whose decision trail
+    records why each earlier candidate was rejected."""
+    solver = plan(shape, jnp.float32, QRConfig(), backend=backend,
+                  ndevices=ndevices, explain=True)
+    ex = solver.explain
+    assert ex is not None
+    assert ex.method == expected == solver.config.method
+    assert ex.shape == shape and ex.backend == backend
+    assert ex.ndevices == ndevices
+    sel = ex.selected
+    assert sel is not None and sel.outcome == "selected" and sel.reason
+    # Every decision in the trail is machine-readable: a stable rule
+    # slug plus a human reason, never empty.
+    for d in ex.decisions:
+        assert d.rule and d.outcome in ("selected", "rejected",
+                                        "fallback", "resolved")
+        assert d.reason
+    # The trail ends at the winner: no decisions after the selection.
+    kinds = [d.outcome for d in ex.decisions]
+    assert "selected" in kinds
+    # fallback_reasons mirrors the fallback decisions exactly.
+    assert ex.fallback_reasons == tuple(
+        d.rule for d in ex.decisions if d.outcome == "fallback")
+
+
+def test_plan_explain_default_off_and_identity_preserving():
+    """explain=False (default) leaves solver.explain None, and the
+    explain field never perturbs solver equality/hash (jit-static id)."""
+    s0 = plan((512, 512), jnp.float32, QRConfig(), backend="cpu")
+    s1 = plan((512, 512), jnp.float32, QRConfig(), backend="cpu",
+              explain=True)
+    assert s0.explain is None and s1.explain is not None
+    assert s0 == s1 and hash(s0) == hash(s1)
+
+
+def test_plan_explain_cpu_floor_fallback_reason():
+    """The silent small-square degradation on CPU — near-square inside
+    the tiled band but under the raised CPU floor — now carries a
+    structured fallback reason."""
+    solver = plan((300, 280), jnp.float32, QRConfig(), backend="cpu",
+                  explain=True)
+    assert solver.config.method == "geqrf_ht"
+    assert "tiled_min_dim_cpu_floor" in solver.explain.fallback_reasons
+    d = solver.explain.decision("tiled_min_dim_cpu_floor")
+    assert d.outcome == "fallback" and "cpu" in d.reason.lower()
+
+
+def test_plan_explain_sharded_degraded_reason():
+    """Past the tiled ceiling with only one device: the sharded route is
+    rejected with a machine-readable reason, not silently skipped."""
+    solver = plan((2049, 1024), jnp.float32, QRConfig(), backend="cpu",
+                  ndevices=1, explain=True)
+    assert solver.config.method == "geqrf_ht"
+    rules = [d.rule for d in solver.explain.decisions]
+    assert "sharded_past_ceiling" in rules
 
 
 def test_auto_sharded_routing_respects_full_mode():
