@@ -75,6 +75,7 @@ def main() -> None:
 
     if qr_records is not None and args.json:
         from repro.observability import metrics as obs_metrics
+        from repro.tuning import cache as tuning_cache
 
         with open(args.json, "w") as f:
             # v2: records carry a dispatch_mode field (engine lowering:
@@ -83,8 +84,12 @@ def main() -> None:
             # top-level "metrics" key is the process-global registry
             # snapshot at the end of the run (planner explain/fallback
             # counters, engine dispatch/DMA series, serving histograms).
+            # "tuning" records which measured planner cache (if any)
+            # governed the auto-routed rows, so a trajectory diff can
+            # tell a code change from a cache change.
             json.dump({"schema": "qr-bench-v2", "smoke": args.smoke,
                        "records": qr_records,
+                       "tuning": tuning_cache.active_cache_info(),
                        "metrics": obs_metrics.snapshot()}, f, indent=1)
         print(f"wrote {len(qr_records)} records to {args.json}",
               file=sys.stderr)

@@ -25,6 +25,8 @@ def main():
     for method in available_methods():
         if method == "geqrf_fori":
             continue  # optimizer-internal variant (needs padded shapes)
+        if method == "degenerate":
+            continue  # zero-dim-only route (auto-selected for empty inputs)
         q, r = qr(a, config=QRConfig(method=method))
         rec = float(jnp.linalg.norm(q @ r - a) / jnp.linalg.norm(a))
         orth = float(jnp.linalg.norm(q.T @ q - jnp.eye(q.shape[1])))
@@ -150,13 +152,23 @@ def main():
     #     the megakernel jaxpr is identical either way (pinned in tests).
     from repro import observability as obs
 
-    explained = plan((512, 512), jnp.float32, QRConfig(), explain=True)
+    #     On swept shape classes the first decision is the autotuner's:
+    #     the committed measured cache (src/repro/tuning/default_cpu.json)
+    #     routes by real microseconds, and the reason cites them —
+    #     use_tuning_cache=False pins the pure heuristic table.
+    explained = plan((512, 512), jnp.float32, QRConfig(), backend="cpu",
+                     explain=True)
     print(f"{'explain':10s} method={explained.config.method} "
           f"<- {explained.explain.selected.rule}: "
           f"{explained.explain.selected.reason}")
+    heur = plan((512, 512), jnp.float32, QRConfig(use_tuning_cache=False),
+                backend="cpu", explain=True)
+    print(f"{'explain':10s} heuristics alone would pick "
+          f"{heur.config.method} <- {heur.explain.selected.rule}")
     fb = plan((300, 280), jnp.float32, QRConfig(), backend="cpu",
               explain=True)
     print(f"{'explain':10s} (300,280)@cpu -> {fb.config.method} "
+          f"(tuned: {fb.explain.decision('tuned').reason}) "
           f"fallbacks={list(fb.explain.fallback_reasons)}")
     with obs.enabled_scope():                    # tracing + annotations on
         service.submit_many(mix)

@@ -118,6 +118,14 @@ class FactorState(NamedTuple):
     t_taus: Array
 
 
+# lru-cache purity contract: the @lru_cache'd helpers below
+# (wavefront_task_arrays, megakernel_task_table, modeled_dma_bytes) are
+# PURE functions of their integer arguments — schedule structure and
+# traffic counts only.  None of them may read the "macro_ops" kernel
+# policy budgets: budgets are runtime knobs (re-registrable, and swept
+# by repro.tuning), so every budget comparison happens un-cached at call
+# time (explain_dispatch_mode / schedule_stats / _check_dispatch).
+# Asserted in tests/test_engine.py (budget-staleness regression).
 @functools.lru_cache(maxsize=None)
 def wavefront_task_arrays(p: int, q: int
                           ) -> Tuple[Dict[str, np.ndarray], ...]:
@@ -269,23 +277,34 @@ def table_fits(p: int, q: int, budget: int) -> Tuple[bool, int]:
     return nbytes <= budget, nbytes
 
 
-def explain_dispatch_mode(p: int, q: int, nb: int,
-                          itemsize: int = 4) -> Tuple[str, str]:
+def explain_dispatch_mode(p: int, q: int, nb: int, itemsize: int = 4, *,
+                          vmem_budget: Optional[int] = None,
+                          table_budget: Optional[int] = None
+                          ) -> Tuple[str, str]:
     """The ``dispatch_mode=None`` auto rule with its concrete reason:
     ``(mode, reason)``.  ``"megakernel"`` when the task table fits the
     scalar-prefetch budget AND the double-buffered tile working set fits
-    VMEM (both limits carried by the ``"macro_ops"`` kernel policy),
-    ``"wavefront"`` otherwise — and the reason string names exactly
-    which budget rejected it."""
+    VMEM, ``"wavefront"`` otherwise — and the reason string names exactly
+    which budget rejected it.
+
+    Budgets default to the CURRENT ``"macro_ops"`` kernel policy, read at
+    call time — deliberately un-cached, so re-registering the policy (or
+    a tuner sweeping budgets) changes the verdict immediately (the
+    staleness-vs-lru contract documented at
+    :func:`wavefront_task_arrays`).  Explicit ``vmem_budget`` /
+    ``table_budget`` overrides let a sweep ask "what would auto pick
+    under budget X" without touching the registry."""
     from repro.core.plan import kernel_table_budget, kernel_vmem_budget
 
     need = macro_ops.megakernel_vmem_bytes(nb, itemsize)
-    vbudget = kernel_vmem_budget("macro_ops")
+    vbudget = (kernel_vmem_budget("macro_ops") if vmem_budget is None
+               else int(vmem_budget))
     if need > vbudget:
         return "wavefront", (
             f"megakernel working set {need} B > VMEM budget {vbudget} B "
             f"at nb={nb}, itemsize={itemsize}")
-    tbudget = kernel_table_budget("macro_ops")
+    tbudget = (kernel_table_budget("macro_ops") if table_budget is None
+               else int(table_budget))
     fits, tbytes = table_fits(p, q, tbudget)
     if not fits:
         return "wavefront", (
@@ -296,14 +315,18 @@ def explain_dispatch_mode(p: int, q: int, nb: int,
         f"{need} B <= VMEM budget {vbudget} B")
 
 
-def resolve_dispatch_mode(p: int, q: int, nb: int,
-                          itemsize: int = 4) -> str:
+def resolve_dispatch_mode(p: int, q: int, nb: int, itemsize: int = 4, *,
+                          vmem_budget: Optional[int] = None,
+                          table_budget: Optional[int] = None) -> str:
     """The ``dispatch_mode=None`` auto rule: ``"megakernel"`` when the
     task table fits the scalar-prefetch budget AND the double-buffered
-    tile working set fits VMEM (both limits carried by the
-    ``"macro_ops"`` kernel policy), ``"wavefront"`` otherwise.  See
-    :func:`explain_dispatch_mode` for the rule with its reasoning."""
-    return explain_dispatch_mode(p, q, nb, itemsize)[0]
+    tile working set fits VMEM (both limits read off the current
+    ``"macro_ops"`` kernel policy at call time, or passed explicitly),
+    ``"wavefront"`` otherwise.  See :func:`explain_dispatch_mode` for
+    the rule with its reasoning."""
+    return explain_dispatch_mode(p, q, nb, itemsize,
+                                 vmem_budget=vmem_budget,
+                                 table_budget=table_budget)[0]
 
 
 @functools.lru_cache(maxsize=None)
@@ -335,18 +358,31 @@ def modeled_dma_bytes(p: int, q: int, nb: int,
     )
 
 
-def schedule_stats(p: int, q: int, nb: int = 32,
-                   itemsize: int = 4) -> Dict[str, object]:
+def schedule_stats(p: int, q: int, nb: int = 32, itemsize: int = 4, *,
+                   vmem_budget: Optional[int] = None,
+                   table_budget: Optional[int] = None) -> Dict[str, object]:
     """Dispatch counts, table/working-set bytes, and modeled HBM traffic
     for both dispatch modes of the ``(p, q)`` schedule — the numbers
     behind the auto rule, the ``bench_kernel_traffic``
-    dispatch-reduction row, and the engine's ``engine.*`` metrics."""
+    dispatch-reduction row, and the engine's ``engine.*`` metrics.
+
+    Un-cached on purpose: the ``auto`` verdict (and the budget fields)
+    reflect the "macro_ops" policy AT CALL TIME unless explicit budget
+    overrides are passed — see the lru-cache purity contract at
+    :func:`wavefront_task_arrays`."""
+    from repro.core.plan import kernel_table_budget, kernel_vmem_budget
+
     batches = wavefront_task_arrays(p, q)
     table, nlevels, nslots = megakernel_task_table(p, q)
     ntasks = int((table[:, _COL_KIND] != _NOOP).sum())
     dma = modeled_dma_bytes(p, q, nb, itemsize)
+    vbudget = (kernel_vmem_budget("macro_ops") if vmem_budget is None
+               else int(vmem_budget))
+    tbudget = (kernel_table_budget("macro_ops") if table_budget is None
+               else int(table_budget))
     return dict(
         p=p, q=q, nb=nb, levels=nlevels, tasks=ntasks,
+        vmem_budget=vbudget, table_budget=tbudget,
         roofline_dma_bytes=dma["roofline"],
         wavefront=dict(
             dispatches=sum(len(b) for b in batches),
@@ -365,7 +401,9 @@ def schedule_stats(p: int, q: int, nb: int = 32,
             vmem_bytes=macro_ops.megakernel_vmem_bytes(nb, itemsize),
             modeled_dma_bytes=dma["megakernel"],
         ),
-        auto=resolve_dispatch_mode(p, q, nb, itemsize),
+        auto=resolve_dispatch_mode(p, q, nb, itemsize,
+                                   vmem_budget=vbudget,
+                                   table_budget=tbudget),
     )
 
 

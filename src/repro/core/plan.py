@@ -138,6 +138,10 @@ _TILED_MAX_ASPECT = 4.0
 # wavefront is wide enough to amortize per-task overhead: at 256^2 the
 # measured wall is ~2.2x geqrf (see ROADMAP smoke table), crossing over
 # near 512.  Keep the 256 floor where the kernel path exists.
+# NOTE this constant is now the *fallback* behind the measured tuning
+# cache (repro.tuning): on swept shape classes the first-priority
+# "tuned" rule routes by real wall times and this guess never fires —
+# it only governs cache misses and use_tuning_cache=False plans.
 _TILED_MIN_DIM_CPU = 512
 
 # Near-square matrices past the single-device tiled ceiling route to the
@@ -185,6 +189,13 @@ class QRConfig:
                 the double-buffered working set fit the "macro_ops"
                 policy budgets, wavefront otherwise).  Both lowerings
                 are bitwise-identical to the jnp oracle.
+    use_tuning_cache: consult the measured tuning cache
+                (:mod:`repro.tuning`) before the static ``method="auto"``
+                heuristics.  On a cache hit the measured best config
+                overrides exactly the knobs the caller left at their
+                defaults (method, block, dispatch_mode, q_method,
+                use_kernel); on a miss — or with False — routing falls
+                through to the heuristic rules, recording why.
     """
 
     method: str = "auto"
@@ -198,6 +209,7 @@ class QRConfig:
     refine: bool = True
     ndomains: Optional[int] = None
     dispatch_mode: Optional[str] = None
+    use_tuning_cache: bool = True
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -424,8 +436,73 @@ def sign_fix_r(r: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# degenerate (zero-dim) shapes — jnp.linalg.qr semantics
+# ---------------------------------------------------------------------------
+
+def _solve_degenerate(a: Array, cfg: QRConfig):
+    """QR of an empty matrix, matching ``jnp.linalg.qr`` exactly:
+    with k = min(m, n) == 0, reduced Q is the (m, 0) identity slice and
+    R is the (0, n) empty triangle; full Q is I_m with R all-zero.
+    Every backend's tile/panel machinery divides by these extents, so
+    the planner routes here before any of them can."""
+    m, n = a.shape
+    k = min(m, n)
+    if cfg.mode == "r":
+        return jnp.zeros((k, n), a.dtype)
+    if cfg.mode == "reduced":
+        return jnp.eye(m, k, dtype=a.dtype), jnp.zeros((k, n), a.dtype)
+    return jnp.eye(m, dtype=a.dtype), jnp.zeros((m, n), a.dtype)
+
+
+register_method(MethodSpec(
+    name="degenerate",
+    solve=_solve_degenerate,
+    supports_full_q=True,
+    batched=True,
+    description="trivial zero-dim (m == 0 or n == 0) factorization with "
+                "jnp.linalg.qr semantics — the planner's early-return for "
+                "empty matrices",
+))
+
+
+# ---------------------------------------------------------------------------
 # planning
 # ---------------------------------------------------------------------------
+
+# The "decide for me" defaults the tuned overlay respects: a measured
+# config only overrides knobs the caller left untouched.
+_DEFAULT_CONFIG = QRConfig()
+
+
+def _apply_tuned_config(resolved: "QRConfig", requested: "QRConfig",
+                        entry, decisions: List["RouteDecision"]
+                        ) -> "QRConfig":
+    """Overlay the measured best config onto the knobs the caller left at
+    their defaults — explicit knobs always win over the cache.  Records a
+    ``tuned_config`` resolve decision when anything changed."""
+    best = entry.best
+    applied = []
+    if (requested.block == _DEFAULT_CONFIG.block
+            and best.block != resolved.block):
+        resolved = dataclasses.replace(resolved, block=best.block)
+        applied.append(f"block={best.block}")
+    if (requested.dispatch_mode is None and resolved.use_kernel
+            and best.dispatch_mode is not None
+            and best.dispatch_mode != resolved.dispatch_mode):
+        resolved = dataclasses.replace(resolved,
+                                       dispatch_mode=best.dispatch_mode)
+        applied.append(f"dispatch_mode={best.dispatch_mode}")
+    if (requested.q_method == _DEFAULT_CONFIG.q_method
+            and best.q_method != resolved.q_method):
+        resolved = dataclasses.replace(resolved, q_method=best.q_method)
+        applied.append(f"q_method={best.q_method}")
+    if requested.use_kernel is None and resolved.use_kernel:
+        applied.append("use_kernel=True")
+    if applied:
+        decisions.append(RouteDecision(
+            "tuned_config", "resolved",
+            "measured config applied: " + ", ".join(applied)))
+    return resolved
 
 def _kernel_fits(spec: MethodSpec, m: int, n: int, cfg: QRConfig,
                  dtype=jnp.float32) -> bool:
@@ -440,28 +517,108 @@ def _kernel_fits(spec: MethodSpec, m: int, n: int, cfg: QRConfig,
     return est * scale <= kernel_vmem_budget(spec.kernel_policy)
 
 
-def _route(shape, dtype, config: QRConfig, backend: Optional[str],
-           ndevices: Optional[int]) -> Tuple[str, List[RouteDecision]]:
-    """The routing table with its reasoning: ``(method, decisions)``.
+# Canonical auto-routing rule order.  Trail-completeness contract
+# (tests/test_plan.py): an auto plan's non-fallback decisions are exactly
+# the prefix of this sequence ending at the selected rule — every rule
+# evaluated before the winner records a "rejected" decision, on every
+# path.  ("tiled_min_dim_cpu_floor" fallbacks and resolve-hook decisions
+# interleave without participating in the prefix.)
+_ROUTE_RULES = ("degenerate_empty", "explicit", "tuned", "tsqr_tall_skinny",
+                "tiled_near_square", "sharded_past_ceiling",
+                "tpu_kernel_panel_fits", "single_panel", "blocked_default")
 
-    Evaluates the same rules as always (behavior unchanged); every rule
-    evaluated is recorded as a :class:`RouteDecision`, and the
-    silent-degradation sites (the CPU tiled floor here; dispatch-mode
-    and domain-count degradations in the resolve hooks) additionally
-    emit ``outcome="fallback"`` decisions + ``planner.fallbacks``
-    counters.
+
+def _tuned_lookup(m: int, n: int, dtype, config: QRConfig, backend: str,
+                  batched: bool):
+    """Consult the measured tuning cache: ``(decision, entry-or-None)``.
+
+    A hit must also pass the capability guards the selected method will
+    face in :func:`plan` (mode/batched/aspect) — an incompatible measured
+    pick records a rejected decision and routing falls through, rather
+    than planning a method that will raise."""
+    if not config.use_tuning_cache:
+        return RouteDecision(
+            "tuned", "rejected",
+            "use_tuning_cache=False pins the heuristic rules"), None
+    from repro.tuning import cache as _tcache
+
+    cache = _tcache.active_cache()
+    if len(cache) == 0:
+        return RouteDecision(
+            "tuned", "rejected",
+            f"no tuning cache loaded (source: {cache.source}) — "
+            f"heuristic rules apply"), None
+    cls = _tcache.shape_class(m, n)
+    entry = cache.lookup(backend=backend, m=m, n=n, dtype=np.dtype(dtype))
+    if entry is None:
+        return RouteDecision(
+            "tuned", "rejected",
+            f"cache miss: no measured entry for shape-class "
+            f"{cls[0]}x{cls[1]} ({backend}, {np.dtype(dtype)}) — "
+            f"heuristic rules apply"), None
+    best = entry.best
+    spec = _REGISTRY.get(best.method)
+    why_unfit = (
+        f"tuned pick {best.method!r} is not registered" if spec is None else
+        f"tuned pick {best.method!r} is thin-only vs mode='full'"
+        if config.mode == "full" and not spec.supports_full_q else
+        f"tuned pick {best.method!r} does not support batched inputs"
+        if batched and not spec.batched else
+        f"tuned pick {best.method!r} needs m >= {spec.min_aspect:g}n"
+        if spec.min_aspect > 0 and m < spec.min_aspect * n else None)
+    if why_unfit is not None:
+        return RouteDecision("tuned", "rejected", why_unfit), None
+    knobs = f"block={best.block}"
+    if best.use_kernel:
+        knobs += f", dispatch={best.dispatch_mode}"
+    return RouteDecision(
+        "tuned", "selected",
+        f"measured: {best.method}[{knobs}] {entry.best_us:.0f} us vs "
+        f"heuristic {entry.heuristic_method} {entry.heuristic_us:.0f} us "
+        f"on {entry.backend}/{entry.device_kind} shape-class "
+        f"{cls[0]}x{cls[1]} ({entry.dtype})"), entry
+
+
+def _route(shape, dtype, config: QRConfig, backend: Optional[str],
+           ndevices: Optional[int]):
+    """The routing table with its reasoning:
+    ``(method, decisions, tuned_entry)``.
+
+    Rules evaluate in :data:`_ROUTE_RULES` order; EVERY rule evaluated
+    before the winner records a :class:`RouteDecision` (selected or
+    rejected) on every path, and the silent-degradation sites (the CPU
+    tiled floor here; dispatch-mode and domain-count degradations in the
+    resolve hooks) additionally record ``outcome="fallback"`` decisions
+    (counted once per plan in :func:`plan` — this function is a pure
+    query).  ``tuned_entry`` is the measured cache entry when the
+    ``"tuned"`` rule won, else None.
     """
     _ensure_builtins()
     dec: List[RouteDecision] = []
+    m, n = int(shape[-2]), int(shape[-1])
+
+    if min(m, n) == 0:
+        why = (f"zero-dim input {m}x{n} — trivial factorization with "
+               f"jnp.linalg.qr semantics")
+        if config.method not in ("auto", "degenerate"):
+            why += (f" (overrides config.method={config.method!r}: no "
+                    f"backend factors an empty matrix)")
+        dec.append(RouteDecision("degenerate_empty", "selected", why))
+        return "degenerate", dec, None
     if config.method != "auto":
         dec.append(RouteDecision(
             "explicit", "selected",
             f"config.method={config.method!r} bypasses auto routing"))
-        return config.method, dec
-    m, n = int(shape[-2]), int(shape[-1])
+        return config.method, dec, None
     backend = jax.default_backend() if backend is None else backend
     ndevices = jax.local_device_count() if ndevices is None else int(ndevices)
     aspect = m / n if n else float("inf")
+
+    tuned_dec, tuned = _tuned_lookup(m, n, dtype, config, backend,
+                                     batched=len(shape) > 2)
+    dec.append(tuned_dec)
+    if tuned is not None:
+        return tuned.best.method, dec, tuned
 
     tspec = _REGISTRY.get("tsqr")
     if (tspec is not None and config.mode != "full" and n >= 1 and m >= 8
@@ -470,7 +627,7 @@ def _route(shape, dtype, config: QRConfig, backend: Optional[str],
             "tsqr_tall_skinny", "selected",
             f"aspect {aspect:.2f} >= {tspec.min_aspect:g} "
             f"({m}x{n}, mode={config.mode!r})"))
-        return "tsqr", dec
+        return "tsqr", dec, None
     if tspec is not None:
         dec.append(RouteDecision(
             "tsqr_tall_skinny", "rejected",
@@ -487,8 +644,6 @@ def _route(shape, dtype, config: QRConfig, backend: Optional[str],
             and _TILED_MIN_DIM <= min(m, n) < _TILED_MIN_DIM_CPU
             and max(m, n) < _TILED_MAX_ASPECT * min(m, n)
             and max(m, n) <= _TILED_MAX_DIM):
-        _metrics.counter("planner.fallbacks",
-                         reason="tiled_min_dim_cpu_floor").inc()
         dec.append(RouteDecision(
             "tiled_min_dim_cpu_floor", "fallback",
             f"min dim {min(m, n)} >= {_TILED_MIN_DIM} routes tiled "
@@ -501,7 +656,7 @@ def _route(shape, dtype, config: QRConfig, backend: Optional[str],
             f"({backend}), aspect {max(m, n) / min(m, n):.2f} < "
             f"{_TILED_MAX_ASPECT:g}, max dim {max(m, n)} <= "
             f"{_TILED_MAX_DIM}"))
-        return "tiled", dec
+        return "tiled", dec, None
     if "tiled" in _REGISTRY:
         dec.append(RouteDecision(
             "tiled_near_square", "rejected",
@@ -520,41 +675,70 @@ def _route(shape, dtype, config: QRConfig, backend: Optional[str],
             "sharded_past_ceiling", "selected",
             f"near-square {m}x{n} <= sharded ceiling {sharded_ceiling} "
             f"({ndevices} devices x {_TILED_MAX_DIM})"))
-        return "sharded_tiled", dec
-    if "sharded_tiled" in _REGISTRY and near_square and max(m, n) > _TILED_MAX_DIM:
+        return "sharded_tiled", dec, None
+    if "sharded_tiled" in _REGISTRY:
+        # Record the evaluation on EVERY path (a near-square shape under
+        # the ceiling with one device used to silently omit this rule).
         dec.append(RouteDecision(
             "sharded_past_ceiling", "rejected",
+            f"not near-square at floor {tiled_floor} (min dim "
+            f"{min(m, n)}, aspect {max(m, n) / min(m, n):.2f})"
+            if not near_square else
+            "batched input (no shard_map under vmap)"
+            if len(shape) != 2 else
+            "mode='full' needs full Q (sharded merge is thin-only)"
+            if config.mode == "full" else
+            f"wide matrix ({m}x{n}): row-domain sharding needs m >= n"
+            if m < n else
             f"single device available (ndevices={ndevices})"
             if ndevices <= 1 else
             f"max dim {max(m, n)} > sharded ceiling {sharded_ceiling}"
             if max(m, n) > sharded_ceiling else
-            "batched input or wide matrix or mode='full'"))
+            f"max dim {max(m, n)} <= single-device tiled ceiling "
+            f"{_TILED_MAX_DIM} — tiled declined for its own reason"))
 
     gspec = _REGISTRY.get("geqrf_ht")
-    if (backend == "tpu" and gspec is not None and config.use_kernel is not False
-            and _kernel_fits(gspec, m, n, config, dtype)):
+    if gspec is not None:
+        if (backend == "tpu" and config.use_kernel is not False
+                and _kernel_fits(gspec, m, n, config, dtype)):
+            dec.append(RouteDecision(
+                "tpu_kernel_panel_fits", "selected",
+                f"backend=tpu and geqrf_ht panel working set fits VMEM "
+                f"budget {kernel_vmem_budget(gspec.kernel_policy)}"))
+            return "geqrf_ht", dec, None
         dec.append(RouteDecision(
-            "tpu_kernel_panel_fits", "selected",
-            f"backend=tpu and geqrf_ht panel working set fits VMEM "
-            f"budget {kernel_vmem_budget(gspec.kernel_policy)}"))
-        return "geqrf_ht", dec
+            "tpu_kernel_panel_fits", "rejected",
+            f"backend={backend} is not tpu" if backend != "tpu" else
+            "use_kernel=False pins the jnp path"
+            if config.use_kernel is False else
+            f"geqrf_ht panel working set exceeds VMEM budget "
+            f"{kernel_vmem_budget(gspec.kernel_policy)} at {m}x{n}"))
     if min(m, n) <= config.block:
         dec.append(RouteDecision(
             "single_panel", "selected",
             f"min dim {min(m, n)} <= block {config.block} — one "
             f"unblocked panel (geqr2_ht)"))
-        return "geqr2_ht", dec
+        return "geqr2_ht", dec, None
+    dec.append(RouteDecision(
+        "single_panel", "rejected",
+        f"min dim {min(m, n)} > block {config.block} — needs blocking"))
     dec.append(RouteDecision(
         "blocked_default", "selected",
         f"no specialized rule matched {m}x{n} on {backend} — blocked "
         f"geqrf_ht default"))
-    return "geqrf_ht", dec
+    return "geqrf_ht", dec, None
 
 
 def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = None,
                   ndevices: Optional[int] = None) -> str:
     """The ``method="auto"`` routing table (trailing two dims of shape).
 
+    0. zero-dim input (m == 0 or n == 0) -> ``degenerate`` (the trivial
+       jnp.linalg.qr-style factorization; overrides explicit methods —
+       no backend factors an empty matrix); then a measured tuning-cache
+       hit for this shape class (:mod:`repro.tuning`, unless
+       ``use_tuning_cache=False``) -> the measured best method, with the
+       real wall times as the decision reason;
     1. tall-skinny (aspect >= tsqr's min_aspect, default 4:1) -> TSQR,
        with ``nblocks`` chosen by the planner;
     2. large near-square (256 <= dims <= 2048, aspect < 4) -> ``tiled``
@@ -574,6 +758,10 @@ def select_method(shape, dtype, config: QRConfig, *, backend: Optional[str] = No
 
     ``plan(..., explain=True)`` returns the full decision trail as a
     :class:`PlanExplain` record on the solver.
+
+    This function is a pure query: it mirrors :func:`plan`'s routing
+    without emitting metrics (fallback counters fire once per plan, in
+    :func:`plan` itself).
     """
     return _route(shape, dtype, config, backend, ndevices)[0]
 
@@ -601,8 +789,20 @@ def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
     batched = len(shape) > 2
     backend = jax.default_backend() if backend is None else backend
 
-    name, decisions = _route(shape, dtype, cfg, backend, ndevices)
+    name, decisions, tuned = _route(shape, dtype, cfg, backend, ndevices)
+    # Fallback counters for _route-level decisions fire HERE, once per
+    # plan — _route/select_method are pure queries, so explain=True (or
+    # a select_method probe) cannot double-count a fallback.  Resolve
+    # hooks run after this loop and emit their own counters for the
+    # decisions they append.
+    for d in decisions:
+        if d.outcome == "fallback":
+            _metrics.counter("planner.fallbacks", reason=d.rule).inc()
     spec = get_method(name)
+    if name == "degenerate" and min(m, n) > 0:
+        raise ValueError(
+            f"method 'degenerate' handles zero-dim shapes only "
+            f"(m == 0 or n == 0), got {m}x{n}")
 
     if batched and not spec.batched:
         raise ValueError(f"method {name!r} does not support batched inputs")
@@ -615,12 +815,17 @@ def plan(shape, dtype=jnp.float32, config: Optional[QRConfig] = None, *,
 
     use_kernel = cfg.use_kernel
     if use_kernel is None:
-        use_kernel = (backend == "tpu" and spec.kernel_backed
-                      and _kernel_fits(spec, m, n, cfg, dtype))
+        if tuned is not None:
+            use_kernel = bool(tuned.best.use_kernel) and spec.kernel_backed
+        else:
+            use_kernel = (backend == "tpu" and spec.kernel_backed
+                          and _kernel_fits(spec, m, n, cfg, dtype))
     elif use_kernel and not spec.kernel_backed:
         raise ValueError(f"method {name!r} has no kernel-backed realization")
 
     resolved = dataclasses.replace(cfg, method=name, use_kernel=bool(use_kernel))
+    if tuned is not None:
+        resolved = _apply_tuned_config(resolved, cfg, tuned, decisions)
     if spec.resolve is not None:
         # Resolve hooks may append RouteDecisions (dispatch-mode choices,
         # domain degradations); hooks predating the kwarg still work.

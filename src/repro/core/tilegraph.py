@@ -312,6 +312,11 @@ def tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
     (the "auto" planner caps dims at 2048 for the default tile).
     """
     m, n = a.shape
+    if m == 0 or n == 0:
+        raise ValueError(
+            f"tiled_qr needs a nonempty matrix, got {a.shape}; zero-dim "
+            "inputs route to the planner's 'degenerate' method "
+            "(jnp.linalg.qr semantics)")
     p, q = tile_grid(m, n, tile)
     nb = tile
     pad = ((0, p * nb - m), (0, q * nb - n))

@@ -43,7 +43,28 @@ PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 ICI_BW = 50e9                # bytes/s / link / chip
 
-__all__ = ["analytic_cell_cost", "roofline_row", "build_table", "main"]
+__all__ = ["analytic_cell_cost", "roofline_row", "build_table", "main",
+           "modeled_seconds", "qr_flops"]
+
+
+# ----------------------------------------------------- generic roofline
+
+def qr_flops(m: int, n: int) -> float:
+    """Householder QR flop count: ``2 k^2 (max(m, n) - k/3)`` with
+    ``k = min(m, n)`` — the effective-GFLOPs convention the QR benches
+    use, here shared with the tuner's candidate pruning."""
+    k = min(m, n)
+    return 2.0 * k * k * (max(m, n) - k / 3.0)
+
+
+def modeled_seconds(flops: float, hbm_bytes: float, *,
+                    chips: int = 1) -> float:
+    """Roofline lower bound on one kernel: the dominant of the compute
+    and HBM terms under the per-chip hardware model above.  Absolute
+    numbers are TPU-calibrated; the tuner uses it *relatively* (prune
+    candidates whose bound already loses by a wide factor), where the
+    asymptotics carry over across backends."""
+    return max(flops / (chips * PEAK_FLOPS), hbm_bytes / (chips * HBM_BW))
 
 
 # ------------------------------------------------------------- flop model

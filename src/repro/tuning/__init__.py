@@ -1,0 +1,37 @@
+"""repro.tuning — the measured half of the planner's co-design story.
+
+``sweep`` measures candidate ``(method, block, dispatch_mode)`` configs
+per shape class on the actual backend; ``cache`` persists the results as
+a versioned JSON the planner's ``"tuned"`` routing rule consults before
+its static heuristics (``repro.core.plan._route``).  Regenerate the
+committed CPU default with::
+
+    PYTHONPATH=src python -m repro.tuning.sweep \\
+        --out src/repro/tuning/default_cpu.json
+"""
+
+from repro.tuning.cache import (  # noqa: F401
+    DEFAULT_CACHE_PATH,
+    ENV_VAR,
+    SCHEMA,
+    TunedConfig,
+    TuningCache,
+    TuningEntry,
+    active_cache,
+    active_cache_info,
+    set_active_cache,
+    shape_class,
+)
+
+__all__ = [
+    "DEFAULT_CACHE_PATH",
+    "ENV_VAR",
+    "SCHEMA",
+    "TunedConfig",
+    "TuningCache",
+    "TuningEntry",
+    "active_cache",
+    "active_cache_info",
+    "set_active_cache",
+    "shape_class",
+]

@@ -258,5 +258,39 @@ def test_factor_tiles_batched_bitwise_per_slice(dispatch_mode, batch, grid,
 def test_registry_has_all_expected_methods():
     """The suite is only meaningful if it sweeps the full registry."""
     for name in ("geqr2", "geqr2_ht", "geqrf", "geqrf_ht", "tsqr", "tiled",
-                 "sharded_tiled"):
+                 "sharded_tiled", "degenerate"):
         assert name in METHODS, f"{name} missing from registry"
+
+
+# --------------------------------------------- degenerate (zero-dim) parity
+
+_DEGENERATE_SHAPES = [(0, 5), (5, 0), (0, 0)]
+
+
+@pytest.mark.parametrize("mode", ["reduced", "r", "full"])
+@pytest.mark.parametrize("shape", _DEGENERATE_SHAPES,
+                         ids=[f"{m}x{n}" for m, n in _DEGENERATE_SHAPES])
+def test_degenerate_shapes_match_linalg_qr(shape, mode):
+    """PR-8 bugfix: zero-dim inputs used to crash the planner where
+    ``jnp.linalg.qr`` succeeds.  The trivial route must match the oracle
+    exactly (shapes AND values — identity Q, zero R)."""
+    a = jnp.zeros(shape, jnp.float32)
+    solver = plan(a.shape, a.dtype, QRConfig(mode=mode))
+    assert solver.config.method == "degenerate"
+    oracle_mode = {"reduced": "reduced", "r": "r", "full": "complete"}[mode]
+    ref = jnp.linalg.qr(a, mode=oracle_mode)
+    if mode == "r":
+        r = solver.solve(a)
+        assert r.shape == ref.shape and bool((r == ref).all())
+    else:
+        q, r = solver.solve(a)
+        assert q.shape == ref[0].shape and r.shape == ref[1].shape
+        assert bool((q == ref[0]).all()) and bool((r == ref[1]).all())
+
+
+def test_degenerate_capability_guard_skips_nonempty():
+    """Explicit method='degenerate' on a nonempty shape is a capability
+    error (so the registry-wide suites above skip it, same as tsqr's
+    aspect guard)."""
+    with pytest.raises(ValueError):
+        plan((32, 32), jnp.float32, QRConfig(method="degenerate"))

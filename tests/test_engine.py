@@ -512,3 +512,64 @@ def test_engine_vmem_estimator_is_worst_case():
         assert macro_ops.vmem_bytes(kind, 32) <= macro_ops.engine_vmem_bytes(32)
     # SSRFB holds the most tiles resident
     assert macro_ops.engine_vmem_bytes(32) == macro_ops.vmem_bytes("SSRFB", 32)
+
+
+# ------------------------------------------ budget staleness (PR-8 bugfix)
+
+def test_dispatch_budgets_read_at_call_time():
+    """Re-registering the "macro_ops" policy changes the auto-dispatch
+    verdict IMMEDIATELY — no helper may have cached a verdict keyed on
+    the old budget.  (The schedule helpers stay lru-cached; only the
+    pure structural parts are.)"""
+    import importlib
+
+    # repro.core re-exports the plan() function under the same name, so
+    # attribute import would shadow the module
+    plan_mod = importlib.import_module("repro.core.plan")
+
+    p, q, nb = 3, 3, 8
+    orig = plan_mod._KERNEL_POLICIES["macro_ops"]
+    assert engine.resolve_dispatch_mode(p, q, nb) == "megakernel"
+    try:
+        plan_mod.register_kernel_policy(
+            dataclasses.replace(orig, table_budget=16))
+        mode, why = engine.explain_dispatch_mode(p, q, nb)
+        assert mode == "wavefront"
+        assert "scalar-prefetch budget 16" in why
+        assert engine.resolve_dispatch_mode(p, q, nb) == "wavefront"
+        assert engine.schedule_stats(p, q, nb)["auto"] == "wavefront"
+        # explicit overrides bypass the registry entirely
+        assert engine.resolve_dispatch_mode(
+            p, q, nb, table_budget=orig.table_budget) == "megakernel"
+    finally:
+        plan_mod.register_kernel_policy(orig)
+    assert engine.resolve_dispatch_mode(p, q, nb) == "megakernel"
+
+
+def test_schedule_stats_reports_budgets():
+    """schedule_stats carries the budgets its auto verdict used, and
+    explicit overrides flow through to both the fields and the verdict."""
+    from repro.core.plan import kernel_table_budget, kernel_vmem_budget
+
+    st = engine.schedule_stats(3, 3, 8)
+    assert st["vmem_budget"] == kernel_vmem_budget("macro_ops")
+    assert st["table_budget"] == kernel_table_budget("macro_ops")
+    assert st["auto"] == "megakernel"
+    st2 = engine.schedule_stats(3, 3, 8, table_budget=16)
+    assert st2["table_budget"] == 16 and st2["auto"] == "wavefront"
+
+
+def test_lru_cached_helpers_are_budget_free():
+    """The purity contract documented above wavefront_task_arrays: the
+    cached helpers take only grid ints; every budget-reading function is
+    deliberately un-cached."""
+    import inspect
+
+    for fn in (engine.wavefront_task_arrays, engine.megakernel_task_table,
+               engine.modeled_dma_bytes):
+        params = inspect.signature(fn).parameters
+        assert "vmem_budget" not in params and "table_budget" not in params
+        assert hasattr(fn, "cache_info")
+    for fn in (engine.explain_dispatch_mode, engine.resolve_dispatch_mode,
+               engine.schedule_stats):
+        assert not hasattr(fn, "cache_info")

@@ -183,6 +183,14 @@ def test_auto_skips_kernel_when_panel_exceeds_vmem():
 # The full auto routing table in one place: (shape, backend, ndevices)
 # -> method.  ndevices=1 is the single-device column; the >1 columns
 # exercise the device-count-aware sharded_tiled routing.
+#
+# These rows document the HEURISTIC rules, so they pin
+# use_tuning_cache=False (_HEUR): with the committed measured cache
+# active, swept shape classes (256^2..512^2 squares on CPU — including
+# (255,255) and (511,500), which pad into those classes) route via the
+# "tuned" rule instead.  tests/test_tuning.py covers that layer.
+_HEUR = QRConfig(use_tuning_cache=False)
+
 _ROUTING_TABLE = [
     ((1024, 32), "cpu", 1, "tsqr"),        # tall-skinny beats everything
     ((1024, 256), "cpu", 1, "tsqr"),       # exactly 4:1 is still TSQR
@@ -217,7 +225,7 @@ _ROUTING_TABLE = [
 
 @pytest.mark.parametrize("shape,backend,ndevices,expected", _ROUTING_TABLE)
 def test_auto_routing_table(shape, backend, ndevices, expected):
-    assert select_method(shape, jnp.float32, QRConfig(),
+    assert select_method(shape, jnp.float32, _HEUR,
                          backend=backend, ndevices=ndevices) == expected
 
 
@@ -227,7 +235,7 @@ def test_auto_routing_table_explain(shape, backend, ndevices, expected):
     attaches a PlanExplain whose selected decision names the winning rule
     with a non-empty machine-readable reason, and whose decision trail
     records why each earlier candidate was rejected."""
-    solver = plan(shape, jnp.float32, QRConfig(), backend=backend,
+    solver = plan(shape, jnp.float32, _HEUR, backend=backend,
                   ndevices=ndevices, explain=True)
     ex = solver.explain
     assert ex is not None
@@ -298,10 +306,12 @@ def test_auto_sharded_routing_respects_batched():
 
 
 def test_auto_picks_tiled_for_large_near_square():
-    solver = plan((512, 512), jnp.float32, QRConfig(), backend="cpu")
+    # heuristic rule under test — pin the cache off (the measured CPU
+    # cache routes 512^2 to geqrf_ht, which is the point of PR 8)
+    solver = plan((512, 512), jnp.float32, _HEUR, backend="cpu")
     assert solver.config.method == "tiled"
     assert solver.config.use_kernel is False  # jnp path off-TPU
-    solver_tpu = plan((512, 512), jnp.float32, QRConfig(), backend="tpu")
+    solver_tpu = plan((512, 512), jnp.float32, _HEUR, backend="tpu")
     assert solver_tpu.config.method == "tiled"
     assert solver_tpu.config.use_kernel is True  # tile pair fits VMEM
 
@@ -438,6 +448,93 @@ def test_lstsq_auto_routes_tall_skinny_through_tsqr():
     b = a @ x_true
     x = lstsq(a, b, config=QRConfig())
     np.testing.assert_allclose(np.asarray(x), np.asarray(x_true), atol=1e-3)
+
+
+# ------------------------------------------------- degenerate (zero-dim)
+
+@pytest.mark.parametrize("shape", [(0, 5), (5, 0), (0, 0)])
+def test_degenerate_routing_zero_dims(shape):
+    """Zero-dim inputs route to the trivial method on every path — the
+    PR-8 bugfix for the planner crashing where jnp.linalg.qr succeeds."""
+    assert select_method(shape, jnp.float32, QRConfig()) == "degenerate"
+    solver = plan(shape, jnp.float32, QRConfig(), explain=True)
+    assert solver.config.method == "degenerate"
+    sel = solver.explain.selected
+    assert sel.rule == "degenerate_empty" and "zero-dim" in sel.reason
+
+
+def test_degenerate_overrides_explicit_method():
+    """An explicit method cannot factor an empty matrix — the override
+    is applied and recorded in the decision reason, not raised."""
+    solver = plan((0, 5), jnp.float32, QRConfig(method="tiled"),
+                  explain=True)
+    assert solver.config.method == "degenerate"
+    assert "overrides config.method='tiled'" in solver.explain.selected.reason
+
+
+def test_degenerate_method_rejects_nonempty():
+    with pytest.raises(ValueError, match="zero-dim"):
+        plan((8, 8), jnp.float32, QRConfig(method="degenerate"))
+
+
+def test_degenerate_batched_solve():
+    a = jnp.zeros((3, 0, 5), jnp.float32)
+    q, r = plan(a.shape, a.dtype, QRConfig()).solve(a)
+    assert q.shape == (3, 0, 0) and r.shape == (3, 0, 5)
+
+
+# ------------------------------------------- explain-trail completeness
+
+def test_route_trail_is_complete_prefix():
+    """PR-8 bugfix: every core rule evaluated before the winner records
+    a decision on EVERY path (sharded_past_ceiling used to vanish from
+    the trail for near-square under-ceiling single-device shapes).  The
+    recorded core-rule decisions must be exactly the contiguous run of
+    ``plan._ROUTE_RULES`` from "tuned" through the selected rule."""
+    from repro.core.plan import _ROUTE_RULES
+
+    for shape, backend, ndevices, expected in _ROUTING_TABLE:
+        solver = plan(shape, jnp.float32, _HEUR, backend=backend,
+                      ndevices=ndevices, explain=True)
+        core = [d for d in solver.explain.decisions if d.rule in _ROUTE_RULES]
+        assert core[-1].outcome == "selected", (shape, backend, ndevices)
+        assert all(d.outcome == "rejected" for d in core[:-1])
+        got = tuple(d.rule for d in core)
+        start = _ROUTE_RULES.index("tuned")
+        stop = _ROUTE_RULES.index(core[-1].rule) + 1
+        assert got == _ROUTE_RULES[start:stop], (shape, backend, ndevices)
+
+
+def test_trail_records_sharded_rejection_under_the_ceiling():
+    """The specific shape class the incomplete-trail bug dropped: the
+    rejected branch used to be recorded only when ``near_square and
+    max(m, n) > _TILED_MAX_DIM``, so any shape that fell through tiled
+    *below* the ceiling lost its sharded decision entirely."""
+    solver = plan((300, 280), jnp.float32, _HEUR, backend="cpu",
+                  ndevices=1, explain=True)
+    d = solver.explain.decision("sharded_past_ceiling")
+    assert d is not None and d.outcome == "rejected"
+    assert "not near-square" in d.reason
+
+
+# ------------------------------------------- fallback-counter hygiene
+
+def test_select_method_is_pure_query_no_counters():
+    """PR-8 bugfix: ``select_method`` / ``_route`` are pure queries —
+    only ``plan()`` emits planner.fallbacks, exactly once per plan, so
+    ``plan(explain=True)`` cannot double-count against an earlier
+    ``select_method`` probe of the same shape."""
+    from repro.observability import metrics
+
+    before = metrics.counter_value("planner.fallbacks",
+                                   reason="tiled_min_dim_cpu_floor")
+    select_method((300, 280), jnp.float32, QRConfig(), backend="cpu")
+    select_method((300, 280), jnp.float32, QRConfig(), backend="cpu")
+    assert metrics.counter_value(
+        "planner.fallbacks", reason="tiled_min_dim_cpu_floor") == before
+    plan((300, 280), jnp.float32, QRConfig(), backend="cpu", explain=True)
+    assert metrics.counter_value(
+        "planner.fallbacks", reason="tiled_min_dim_cpu_floor") == before + 1
 
 
 def test_solver_q_method_solve_matches_formq():
