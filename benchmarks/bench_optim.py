@@ -1,42 +1,172 @@
-"""Beyond-paper table: QR-Muon vs NS-Muon vs AdamW on a small LM.
+"""Optimizer-step orthogonalization bench — dispatch economy of the
+shape-class-batched QR-Muon step (beyond-paper §Perf).
 
-The paper's MHT QR as a production optimizer primitive (DESIGN.md §3):
-loss after a fixed budget of steps on the deterministic synthetic stream,
-plus per-step orthogonalization cost.
+One Muon step orthogonalizes every 2-D momentum matrix in the model.
+The leafwise baseline issues one QR program per parameter leaf; the
+batched path (``muon_update(..., batched_ortho=True)``) groups the
+matrices into shape classes and issues ONE dispatch per class
+(:mod:`repro.optim.batched_ortho`).  This bench runs both twins on the
+same model/grads and reports, per twin,
+
+  * per-step optimizer wall time (the ``muon_update`` call alone — the
+    quantity the batching accelerates; fwd/bwd would dilute it),
+  * QR dispatches per step: leafwise = one per Muon leaf, batched =
+    ``plan_batched_ortho(...).dispatches`` (a pure shape query — the
+    routing is static, so the count needs no runtime instrumentation),
+  * shape classes / matrices per step and the resulting speedup,
+  * max param divergence between the twins (parity guard: same update,
+    different dispatch schedule).
+
+Records merge into BENCH_qr.json on the qr-bench-v2 schema via
+``benchmarks/run.py`` (twin rows ``optim_muon_qr_step[batched]`` /
+``[leafwise]`` carry ``dispatches_per_step`` / ``shape_classes`` /
+``matrices_per_step`` / ``speedup_vs_leafwise`` extras); standalone use
+writes BENCH_optim.json:
+
+    PYTHONPATH=src python benchmarks/bench_optim.py --smoke
 """
 
+import argparse
+import functools
+import json
+import sys
 import time
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_smoke_config
-from repro.data import DataConfig, SyntheticLM
-from repro.training import TrainConfig, init_train_state, make_train_step
+from repro.configs import get_config, get_smoke_config
+from repro.models import init_params
+from repro.observability import metrics as _obs_metrics
+from repro.optim import (is_muon_param, muon_init, muon_update,
+                         plan_batched_ortho)
 
 
-def run() -> list:
-    cfg = get_smoke_config("smollm-135m")
-    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
-                                  global_batch=8, seed=3))
-    rows = []
-    for opt, lr in [("muon-qr", 0.02), ("muon-ns", 0.02), ("adamw", 2e-3)]:
-        from repro.models import init_params
+def _qr_flops(m: int, n: int) -> float:
+    if m < n:
+        m, n = n, m
+    return 2.0 * n * n * (m - n / 3.0)
 
-        params = init_params(jax.random.PRNGKey(0), cfg)
-        tc = TrainConfig(optimizer=opt, lr=lr)
-        state = init_train_state(params, tc)
-        step = jax.jit(make_train_step(cfg, tc))
-        lr_arr = jnp.float32(lr)
-        # warmup/compile
-        state, metrics = step(state, data.peek(0), lr_arr)
-        jax.block_until_ready(metrics["loss"])
+
+def _muon_leaves(params):
+    """(shape, dtype) of every Muon-routed leaf, tree order."""
+    leaves = []
+    jax.tree_util.tree_map_with_path(
+        lambda path, p: leaves.append((tuple(p.shape), p.dtype))
+        if is_muon_param(path, p) else None, params)
+    return leaves
+
+
+def _time_step(step, grads, state, params, reps):
+    """Median per-step wall of a compiled optimizer step (state threads
+    through so every rep does real momentum work)."""
+    new_p, new_s = step(grads, state, params)
+    jax.block_until_ready(new_p)  # compile + warm
+    walls = []
+    for _ in range(reps):
         t0 = time.perf_counter()
-        losses = []
-        for i in range(1, 16):
-            state, metrics = step(state, data.peek(i), lr_arr)
-            losses.append(float(metrics["loss"]))
-        dt = (time.perf_counter() - t0) / 15 * 1e6
-        rows.append((f"optim_{opt}", dt,
-                     f"loss_step15={losses[-1]:.3f};loss_step1={losses[0]:.3f}"))
-    return rows
+        new_p, new_s = step(grads, new_s, params)
+        jax.block_until_ready(new_p)
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls)), (new_p, new_s)
+
+
+def sweep(smoke: bool = False) -> list:
+    """Run the batched/leafwise optimizer-step twins; returns
+    qr-bench-v2-compatible records (run.py merges them into
+    BENCH_qr.json next to the method and serving sweeps)."""
+    cfg = get_smoke_config("smollm-135m") if smoke \
+        else get_config("smollm-135m")
+    reps = 10 if smoke else 20
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    keys = iter(jax.random.split(jax.random.PRNGKey(1),
+                                 len(jax.tree.leaves(params))))
+    grads = jax.tree.map(
+        lambda p: 0.1 * jax.random.normal(next(keys), p.shape, jnp.float32),
+        params)
+    state = muon_init(params)
+
+    shapes = _muon_leaves(params)
+    plan = plan_batched_ortho(shapes)
+    step_flops = sum(
+        _qr_flops(s[-2], s[-1]) * int(np.prod(s[:-2], dtype=np.int64))
+        for s, _ in shapes)
+
+    records, results = [], {}
+    for label, batched in [("leafwise", False), ("batched", True)]:
+        d0 = _obs_metrics.counter_total("optim.ortho_dispatches")
+        step = jax.jit(functools.partial(muon_update, lr=0.02,
+                                         batched_ortho=batched))
+        wall, results[label] = _time_step(step, grads, state, params, reps)
+        dispatches = plan.dispatches if batched else len(shapes)
+        records.append(dict(
+            method=f"optim_muon_qr_step[{label}]",
+            m=max(c.key.m for c in plan.classes),
+            n=max(c.key.n for c in plan.classes),
+            dtype="float32",
+            wall_us=wall * 1e6,
+            gflops=step_flops / wall / 1e9,
+            engine=False, dispatch_mode=None,
+            dispatches_per_step=dispatches,
+            shape_classes=len(plan.classes),
+            matrices_per_step=plan.n_matrices,
+            muon_leaves=len(shapes),
+            metrics=dict(traced_ortho_dispatches=int(
+                _obs_metrics.counter_total("optim.ortho_dispatches") - d0)),
+        ))
+    # Parity guard + twin-relative extras ride on the batched record.
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        results["leafwise"][0], results["batched"][0])))
+    records[1]["speedup_vs_leafwise"] = records[0]["wall_us"] / \
+        records[1]["wall_us"]
+    records[1]["max_param_diff_vs_leafwise"] = diff
+    print(f"# optim step: {plan.n_matrices} matrices -> "
+          f"{plan.dispatches} dispatches ({len(plan.classes)} classes); "
+          f"speedup {records[1]['speedup_vs_leafwise']:.2f}x, "
+          f"twin param diff {diff:.2e}", file=sys.stderr)
+    return records
+
+
+def rows(records: list) -> list:
+    """Format optimizer records as the harness's CSV rows."""
+    out = []
+    for r in records:
+        derived = (f"dispatches={r['dispatches_per_step']};"
+                   f"classes={r['shape_classes']};"
+                   f"matrices={r['matrices_per_step']}")
+        if "speedup_vs_leafwise" in r:
+            derived += (f";speedup={r['speedup_vs_leafwise']:.2f}"
+                        f";param_diff={r['max_param_diff_vs_leafwise']:.1e}")
+        out.append((r["method"], r["wall_us"], derived))
+    return out
+
+
+def run(smoke: bool = False) -> list:
+    return rows(sweep(smoke=smoke))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced (smoke) model config")
+    ap.add_argument("--json", default="BENCH_optim.json", metavar="PATH",
+                    help="where to write records (standalone runs)")
+    args = ap.parse_args()
+    records = sweep(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows(records):
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": "qr-bench-v2", "smoke": args.smoke,
+                       "records": records}, f, indent=1)
+        print(f"wrote {len(records)} records to {args.json}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,8 +32,9 @@ _MODULES = [
 ]
 
 # Modules whose sweep() records merge into the BENCH_qr.json trajectory
-# (qr-bench-v2 rows; serving rows carry extra latency/throughput fields).
-_QR_RECORD_MODULES = ("qr_methods", "qr_serving")
+# (qr-bench-v2 rows; serving rows carry extra latency/throughput fields,
+# optimizer rows carry dispatch-economy twins — batched vs leafwise).
+_QR_RECORD_MODULES = ("qr_methods", "qr_serving", "optim_beyond_paper")
 
 
 def main() -> None:

@@ -185,6 +185,27 @@ def main():
     print("orthogonalize:", o.shape,
           float(jnp.linalg.norm(o.T @ o - jnp.eye(64))))
 
+    # 5b. batched optimizer-step orthogonalization: a Muon step holds
+    #     dozens of momentum matrices in a few repeated shapes — group
+    #     them into shape classes and factor each class in ONE dispatch
+    #     instead of one per leaf (muon_update(batched_ortho=True) rides
+    #     on this).  plan_batched_ortho is a pure shape query: it counts
+    #     dispatches and carries the planner's explain trail per class.
+    from repro.optim import plan_batched_ortho
+
+    step_shapes = [((3, 48, 48), jnp.float32)] * 4 + \
+        [((3, 96, 48), jnp.float32), ((3, 48, 96), jnp.float32),
+         ((40, 24), jnp.float32)]
+    oplan = plan_batched_ortho(step_shapes)
+    print(f"{'batched':10s} {oplan.n_matrices} matrices / "
+          f"{oplan.n_leaves} leaves -> {oplan.dispatches} dispatches "
+          f"({len(oplan.classes)} shape classes)")
+    for cls in oplan.classes:
+        trail = (f"{cls.method} <- {cls.explain.selected.rule}"
+                 if cls.route == "batched" else cls.reason.split(":")[0])
+        print(f"{'':10s} class {cls.key.m}x{cls.key.n} "
+              f"b={len(cls.members)}: {cls.route} ({trail})")
+
     # 6. least squares (Kalman-filter building block, paper §1)
     x = lstsq(a, a @ jnp.ones((128,), jnp.float32), config=QRConfig())
     print("lstsq residual:", float(jnp.linalg.norm(x - 1.0)))

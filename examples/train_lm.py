@@ -23,6 +23,10 @@ def main():
                     help="reduced config instead of the full 135M")
     ap.add_argument("--optimizer", default="muon-qr",
                     choices=["muon-qr", "muon-ns", "adamw"])
+    ap.add_argument("--batched-ortho", action="store_true",
+                    help="batch the Muon orthogonalizations per shape "
+                         "class: one QR dispatch per class instead of "
+                         "one per layer (repro.optim.batched_ortho)")
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
     args = ap.parse_args()
 
@@ -31,7 +35,8 @@ def main():
                       global_batch=args.batch)
     trainer = Trainer(
         cfg,
-        TrainConfig(optimizer=args.optimizer, lr=0.02, microbatch=4),
+        TrainConfig(optimizer=args.optimizer, lr=0.02, microbatch=4,
+                    batched_ortho=args.batched_ortho),
         RunConfig(total_steps=args.steps, warmup_steps=20, log_every=10,
                   checkpoint_every=100, checkpoint_dir=args.checkpoint_dir),
         data,

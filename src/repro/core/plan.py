@@ -77,6 +77,7 @@ one number (:data:`DEFAULT_VMEM_BUDGET`, via :func:`kernel_vmem_budget`).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -240,6 +241,14 @@ class MethodSpec:
              None when the method has no packed form (e.g. TSQR).
     solve:   ``(a, cfg) -> (q, r) | r`` honoring cfg.mode/sign_fix; when
              None the planner derives it from ``factor``.
+    solve_batched: optional native batched realization
+             ``(a_bmn, cfg) -> (q, r) | r`` over one leading batch axis.
+             When present, :meth:`QRSolver.solve` hands 3-D inputs here
+             instead of vmapping ``solve`` — the tiled backend uses it to
+             factor a whole stack through ONE
+             :func:`repro.core.engine.factor_tiles_batched` dispatch
+             (megakernel mode: one ``pallas_call`` for the stack).
+             Deeper batch dims still vmap down to this rule.
     resolve: optional ``(m, n, cfg, *, dtype) -> cfg`` hook filling
              method-specific fields (TSQR uses it to pick ``nblocks``;
              the tiled backends use ``dtype`` — the planned element
@@ -254,6 +263,7 @@ class MethodSpec:
     name: str
     factor: Optional[Callable] = None
     solve: Optional[Callable] = None
+    solve_batched: Optional[Callable] = None
     resolve: Optional[Callable] = None
     supports_full_q: bool = True
     min_aspect: float = 0.0
@@ -938,9 +948,17 @@ class QRSolver:
     def solve(self, a: Array):
         """Factorize per ``config.mode``: (Q, R), R only, or full (Q, R).
 
-        Inputs with leading batch dims are vmapped over those dims.
+        Inputs with leading batch dims are vmapped over those dims —
+        except that a method registering ``solve_batched`` receives the
+        innermost ``(B, m, n)`` stack natively (the tiled backend turns
+        it into ONE batched engine dispatch instead of B vmapped ones).
         """
         self._check(a)
+        if self.spec.solve_batched is not None and a.ndim >= 3:
+            f = functools.partial(self.spec.solve_batched, cfg=self.config)
+            for _ in range(a.ndim - 3):
+                f = jax.vmap(f)
+            return f(self._cast(a))
         return self._batched(self._solve2d, a)
 
     def factor(self, a: Array):

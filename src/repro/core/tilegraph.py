@@ -60,6 +60,7 @@ __all__ = [
     "wavefront_count",
     "tile_grid",
     "tiled_qr",
+    "tiled_qr_batched",
     "domain_rows",
     "domain_wavefronts",
     "merge_levels",
@@ -338,6 +339,88 @@ def tiled_qr(a: Array, *, tile: int = 32, mode: str = "reduced",
     raise ValueError(f"unknown mode {mode!r}")
 
 
+def _factor_stack_padded(a_pad: Array, *, p: int, q: int, nb: int,
+                         mode: str, use_kernel: bool = False,
+                         dispatch_mode: str = None, interpret: bool = None):
+    """Factor a tile-aligned ``(B, p*nb, q*nb)`` stack through ONE
+    batched engine dispatch, returning FULL padded factors —
+    ``(r_full,)`` for mode="r", ``(q_full, r_full)`` otherwise (both
+    batch-leading, grid-extent shapes).  Keeping outputs full-extent lets
+    callers that donate the input stack (the serving bucket executables)
+    alias it into an output buffer; the unpadding slice lives in the
+    wrappers instead.
+
+    The stack shares one task table: on the megakernel path the whole
+    batch is a single ``pallas_call`` with a batch axis on the grid;
+    other modes vmap the per-slice program.  Bitwise-equal per slice to
+    independent :func:`tiled_qr` runs (the ``B == 1`` Q formation skips
+    vmap — batch-1 vmapped ``dot_general`` is not bitwise-stable)."""
+    b = a_pad.shape[0]
+    tiles = jax.vmap(lambda x: _split_tiles(x, p, q, nb))(a_pad)
+    f = engine.factor_tiles_batched(tiles, p=p, q=q, nb=nb,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret,
+                                    dispatch_mode=dispatch_mode)
+    r_full = jax.vmap(lambda t: jnp.triu(_join_tiles(t)))(f.tiles)
+    if mode == "r":
+        return (r_full,)
+    if mode not in ("reduced", "full"):
+        raise ValueError(f"unknown mode {mode!r}")
+    ncols = min(p * nb, q * nb) if mode == "reduced" else p * nb
+    form = lambda *fs: _form_q_tiled(  # noqa: E731
+        engine.FactorState(*fs), ncols=ncols)
+    q_mat = (form(*(x[0] for x in f))[None] if b == 1
+             else jax.vmap(form)(*f))
+    return (q_mat, r_full)
+
+
+def _tiled_qr_batched_impl(a: Array, *, tile: int = 32,
+                           mode: str = "reduced", use_kernel: bool = False,
+                           dispatch_mode: str = None,
+                           interpret: bool = None):
+    """QR of a ``(B, m, n)`` stack through ONE batched engine dispatch.
+
+    Zero-pads every slice to the shared tile grid, factors the whole
+    stack via :func:`_factor_stack_padded` (one
+    :func:`repro.core.engine.factor_tiles_batched` call — a single
+    ``pallas_call`` on the megakernel path), and returns unpadded
+    slices: same modes/shapes as :func:`tiled_qr` with a leading batch
+    axis.  This is the shared lowering behind the serving layer's bucket
+    programs and the optimizer's shape-class dispatch
+    (:mod:`repro.optim.batched_ortho`).
+    """
+    b, m, n = a.shape
+    if m == 0 or n == 0:
+        raise ValueError(
+            f"tiled_qr_batched needs nonempty matrices, got {a.shape}")
+    p, q = tile_grid(m, n, tile)
+    nb = tile
+    pad = ((0, 0), (0, p * nb - m), (0, q * nb - n))
+    a_pad = jnp.pad(a, pad) if (pad[1][1] or pad[2][1]) else a
+    out = _factor_stack_padded(a_pad, p=p, q=q, nb=nb, mode=mode,
+                               use_kernel=use_kernel,
+                               dispatch_mode=dispatch_mode,
+                               interpret=interpret)
+    k = min(m, n)
+    if mode == "r":
+        return out[0][:, :k, :n]
+    q_mat, r_full = out
+    if mode == "reduced":
+        return q_mat[:, :m, :k], r_full[:, :k, :n]
+    return q_mat[:, :m, :m], r_full[:, :m, :n]
+
+
+# The public wrapper jits once per (shape, knobs); callers composing the
+# lowering into a larger traced program (the serving bucket executables,
+# the batched-ortho optimizer path) trace the impl or
+# ``_factor_stack_padded`` directly — donation does not cross a nested
+# jit boundary.
+tiled_qr_batched = jax.jit(
+    _tiled_qr_batched_impl,
+    static_argnames=("tile", "mode", "use_kernel", "dispatch_mode",
+                     "interpret"))
+
+
 # -- registry -----------------------------------------------------------------
 from repro.core.plan import (  # noqa: E402
     MethodSpec, QRConfig, register_method, sign_fix_qr, sign_fix_r)
@@ -408,6 +491,32 @@ def _solve_tiled(a: Array, cfg: QRConfig):
     return sign_fix_qr(q, r) if cfg.sign_fix else (q, r)
 
 
+def _solve_tiled_batched(a: Array, cfg: QRConfig):
+    """Native (B, m, n) solve: same semantics as :func:`_solve_tiled` per
+    slice, but the whole stack factors through one batched engine
+    dispatch (sign fixing and Q-by-solve vmap over the batch — they are
+    elementwise / per-slice dense ops, not engine work)."""
+    _, m, n = a.shape
+    tile = cfg.block  # capped at min(m, n) by the _resolve_tiled hook
+    if cfg.mode == "r":
+        r = tiled_qr_batched(a, tile=tile, mode="r",
+                             use_kernel=bool(cfg.use_kernel),
+                             dispatch_mode=cfg.dispatch_mode)
+        return jax.vmap(sign_fix_r)(r) if cfg.sign_fix else r
+    if cfg.mode == "reduced" and cfg.q_method == "solve" and m >= n:
+        from repro.core.tsqr import triangular_inverse_apply
+
+        r = tiled_qr_batched(a, tile=tile, mode="r",
+                             use_kernel=bool(cfg.use_kernel),
+                             dispatch_mode=cfg.dispatch_mode)
+        q = jax.vmap(triangular_inverse_apply)(a, r[:, :n, :n])
+    else:
+        q, r = tiled_qr_batched(a, tile=tile, mode=cfg.mode,
+                                use_kernel=bool(cfg.use_kernel),
+                                dispatch_mode=cfg.dispatch_mode)
+    return jax.vmap(sign_fix_qr)(q, r) if cfg.sign_fix else (q, r)
+
+
 def _vmem_tiled(m: int, n: int, cfg: QRConfig) -> int:
     """Smallest working set the kernel path can run in (fp32 units — the
     caller scales by element width).  With ``dispatch_mode`` unset or
@@ -427,6 +536,7 @@ def _vmem_tiled(m: int, n: int, cfg: QRConfig) -> int:
 register_method(MethodSpec(
     name="tiled",
     solve=_solve_tiled,
+    solve_batched=_solve_tiled_batched,
     resolve=_resolve_tiled,
     kernel_backed=True,
     vmem_bytes=_vmem_tiled,

@@ -2,11 +2,17 @@
 
     adamw          baseline / fallback optimizer
     qr_muon        Muon with MHT-QR or Newton-Schulz orthogonalization
+    batched_ortho  shape-class-batched orthogonalization (one dispatch
+                   per class instead of per leaf)
     newton_schulz  the NS quintic baseline
     schedule       warmup+cosine LR
 """
 
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.batched_ortho import (
+    DEFAULT_ORTHO_POLICY, OrthoClassPlan, OrthoPlan, batched_orthogonalize,
+    plan_batched_ortho,
+)
 from repro.optim.newton_schulz import newton_schulz_orthogonalize
 from repro.optim.qr_muon import (
     MuonState, is_muon_param, muon_init, muon_update, qr_orthogonalize_2d,
@@ -17,4 +23,6 @@ __all__ = [
     "AdamWState", "adamw_init", "adamw_update",
     "MuonState", "muon_init", "muon_update", "is_muon_param",
     "qr_orthogonalize_2d", "newton_schulz_orthogonalize", "warmup_cosine",
+    "DEFAULT_ORTHO_POLICY", "OrthoClassPlan", "OrthoPlan",
+    "batched_orthogonalize", "plan_batched_ortho",
 ]

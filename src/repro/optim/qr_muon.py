@@ -27,6 +27,7 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.householder import form_q, unpack_r
 from repro.core.plan import QRConfig, plan as qr_plan
@@ -44,6 +45,17 @@ class _Out(NamedTuple):
     p: object
     mu: object
     nu: object
+
+
+class _Pre(NamedTuple):
+    """Pass-1 record of the two-pass batched-ortho update: AdamW leaves
+    arrive finished (``p`` set, ``direction`` None); Muon leaves carry the
+    momentum direction awaiting the shape-class-batched orthogonalization
+    before pass 2 finishes ``p``."""
+    p: object           # finished param (adam) or original param (muon)
+    mu: object
+    nu: object
+    direction: object   # muon momentum direction, else None
 
 
 class MuonState(NamedTuple):
@@ -98,21 +110,30 @@ def qr_orthogonalize_2d(m_in: Array, *, block: int = 64,
       * "formq" (default — the paper-faithful baseline): accumulate
         reflectors; exact even for singular input, but a min(m,n)-trip
         sequential loop.
+
+    Accumulation runs in ``promote_types(param_dtype, float32)`` — bf16
+    storage params factor in fp32 (and round back to bf16 on return),
+    fp64 params keep fp64 precision — the factorization never silently
+    downcasts the way the old hardcoded-fp32 plan did.
     """
+    # Compute dtype: at least fp32 (bf16/f16 storage accumulates in
+    # fp32), but NEVER below the param dtype (f64 stays f64).
+    compute_dtype = jnp.promote_types(m_in.dtype, jnp.float32)
     if config is None:
         config = QRConfig(method="geqrf_fori", block=block, q_method=q_method,
-                          precision="float32", sign_fix=True)
+                          precision=str(np.dtype(compute_dtype)),
+                          sign_fix=True)
     q_method = config.q_method
     transpose = m_in.shape[0] < m_in.shape[1]
     a = m_in.T if transpose else m_in
     mrows, ncols = a.shape
     blk = min(config.block, ncols)
-    a32 = a.astype(jnp.float32)
-    padded = _pad_to(a32, blk)
+    acc = a.astype(compute_dtype)
+    padded = _pad_to(acc, blk)
     # The optimizer needs the packed factored form — resolve "auto" to the
     # fused-program realization rather than letting the planner pick TSQR.
     method = "geqrf_fori" if config.method == "auto" else config.method
-    solver = qr_plan(padded.shape, jnp.float32,
+    solver = qr_plan(padded.shape, compute_dtype,
                      config.replace(block=blk, method=method))
     packed, taus = solver.factor(padded)
     r = unpack_r(packed)[:ncols, :ncols]
@@ -129,12 +150,12 @@ def qr_orthogonalize_2d(m_in: Array, *, block: int = 64,
         clamp = jnp.where(jnp.abs(d) < 1e-7 * dmax,
                           jnp.where(d >= 0, 1e-7 * dmax, -1e-7 * dmax), d)
         r_safe = r + jnp.diag(clamp - d)
-        r_inv = solve_triangular(r_safe, jnp.eye(ncols, dtype=jnp.float32),
+        r_inv = solve_triangular(r_safe, jnp.eye(ncols, dtype=compute_dtype),
                                  lower=False)
-        q = a32 @ r_inv
+        q = acc @ r_inv
     else:
         q = form_q(packed, taus)[:mrows, :ncols]
-    signs = jnp.where(jnp.diagonal(r) >= 0, 1.0, -1.0)
+    signs = jnp.where(jnp.diagonal(r) >= 0, 1.0, -1.0).astype(q.dtype)
     q = q * signs[None, :]
     return (q.T if transpose else q).astype(m_in.dtype)
 
@@ -239,6 +260,8 @@ def muon_update(
     qr_q_method: str = "formq",
     qr_shard_leaves: bool = False,
     qr_config: Optional[QRConfig] = None,
+    batched_ortho: bool = False,
+    ortho_policy=None,
 ):
     """One optimizer step.  ``lr`` is the Muon LR; AdamW params use
     ``lr * adam_lr_ratio`` (embeddings etc. want a smaller step).
@@ -246,11 +269,68 @@ def muon_update(
     ``qr_config`` tunes the QR realization (method/block/kernel policy)
     of the orthogonalization; ``qr_q_method`` still wins for the Q
     materialization strategy (the sharding fallback logic may override it
-    per leaf)."""
+    per leaf).
+
+    ``batched_ortho=True`` routes the orthogonalizations through
+    :func:`repro.optim.batched_ortho.batched_orthogonalize`: every Muon
+    matrix of the step groups into shape classes and each class factors
+    in ONE dispatch, dropping the per-step QR dispatch count from
+    O(muon leaves) to O(shape classes).  Applies only to the plain QR
+    path — a custom ``orthogonalize_fn`` or ``qr_shard_leaves`` (whose
+    per-leaf sharding constraints a cross-leaf stack cannot express)
+    keeps the leafwise route.  ``ortho_policy`` (a
+    :class:`repro.serving.bucketing.BucketingPolicy`) overrides the
+    shape-class edges."""
     step = state.step + 1
     t = step.astype(jnp.float32)
     bc1 = 1.0 - adam_b1 ** t
     bc2 = 1.0 - adam_b2 ** t
+
+    use_batched = (batched_ortho and method == "qr"
+                   and orthogonalize_fn is None and not qr_shard_leaves)
+
+    def finish_muon(p, o):
+        d_out, d_in = p.shape[-2], p.shape[-1]
+        scale = jnp.sqrt(jnp.maximum(1.0, d_out / d_in))
+        new_p = p - lr * (scale * o + weight_decay * p)
+        return new_p.astype(p.dtype)
+
+    if use_batched:
+        from repro.optim.batched_ortho import batched_orthogonalize
+
+        def pre(path, p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            if is_muon_param(path, p):
+                mu = momentum * mu + g
+                direction = g + momentum * mu if nesterov else mu
+                return _Pre(p, mu, nu, direction)
+            mu2 = adam_b1 * mu + (1 - adam_b1) * g
+            nu2 = adam_b2 * nu + (1 - adam_b2) * (g * g)
+            upd_ = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + adam_eps)
+            new_p = p - (lr * adam_lr_ratio) * (upd_ + weight_decay * p)
+            return _Pre(new_p.astype(p.dtype), mu2, nu2, None)
+
+        is_pre = lambda x: isinstance(x, _Pre)  # noqa: E731
+        pres = jax.tree_util.tree_map_with_path(
+            lambda path, p, g, mu, nu: pre(path, p, g, mu, nu),
+            params, grads, state.mu, state.nu)
+        flat, treedef = jax.tree_util.tree_flatten(pres, is_leaf=is_pre)
+        cfg = qr_config
+        if cfg is not None:
+            cfg = cfg.replace(q_method=qr_q_method)
+        orth = iter(batched_orthogonalize(
+            [f.direction for f in flat if f.direction is not None],
+            policy=ortho_policy, config=cfg,
+            fallback=functools.partial(qr_orthogonalize_2d,
+                                       q_method=qr_q_method, config=cfg)))
+        flat = [f if f.direction is None else
+                f._replace(p=finish_muon(f.p, next(orth)), direction=None)
+                for f in flat]
+        out = jax.tree_util.tree_unflatten(treedef, flat)
+        new_params = jax.tree.map(lambda o: o.p, out, is_leaf=is_pre)
+        new_mu = jax.tree.map(lambda o: o.mu, out, is_leaf=is_pre)
+        new_nu = jax.tree.map(lambda o: o.nu, out, is_leaf=is_pre)
+        return new_params, MuonState(step=step, mu=new_mu, nu=new_nu)
 
     def upd(path, p, g, mu, nu):
         g = g.astype(jnp.float32)
@@ -261,10 +341,7 @@ def muon_update(
                                     q_method=qr_q_method,
                                     shard_leaves=qr_shard_leaves,
                                     config=qr_config)
-            d_out, d_in = p.shape[-2], p.shape[-1]
-            scale = jnp.sqrt(jnp.maximum(1.0, d_out / d_in))
-            new_p = p - lr * (scale * o + weight_decay * p)
-            return new_p.astype(p.dtype), mu, nu  # nu: scalar placeholder
+            return finish_muon(p, o), mu, nu  # nu: scalar placeholder
         mu2 = adam_b1 * mu + (1 - adam_b1) * g
         nu2 = adam_b2 * nu + (1 - adam_b2) * (g * g)
         upd_ = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + adam_eps)

@@ -4,8 +4,8 @@ discipline: bucket dynamic traffic into a small set of static shapes,
 cache the compiled executables, keep steady state compile-free."""
 
 from repro.serving.bucketing import (
-    BucketKey, BucketingPolicy, bucket_key, bucketize, pad_batch, pad_dim,
-    pow2ish_edges)
+    BucketKey, BucketingPolicy, bucket_key, bucketize, group_shape_classes,
+    pad_batch, pad_dim, pow2ish_edges)
 from repro.serving.engine import ServeEngine, serve_step
 from repro.serving.qr_service import QRRequest, QRResult, QRService
 
@@ -18,6 +18,7 @@ __all__ = [
     "ServeEngine",
     "bucket_key",
     "bucketize",
+    "group_shape_classes",
     "pad_batch",
     "pad_dim",
     "pow2ish_edges",

@@ -40,6 +40,7 @@ __all__ = [
     "BucketingPolicy",
     "bucket_key",
     "bucketize",
+    "group_shape_classes",
     "pad_batch",
     "pad_dim",
     "pow2ish_edges",
@@ -144,6 +145,22 @@ def pad_batch(b: int, *, max_batch: int) -> int:
     while p < b:
         p *= 2
     return min(p, max_batch)
+
+
+def group_shape_classes(shapes: Sequence[Tuple], policy: BucketingPolicy,
+                        *, mode: str = "reduced"
+                        ) -> Dict[BucketKey, List[int]]:
+    """Group ``(m, n, dtype)`` shape triples into padded shape classes,
+    returning the member indices of each class (input order preserved
+    within a class) — the reusable core of request bucketing, shared by
+    the serving intake (:func:`bucketize` over request objects) and the
+    optimizer's batched orthogonalization
+    (:mod:`repro.optim.batched_ortho`, which groups the 2-D momentum
+    matrices of one update step the same way the tuning cache keys shape
+    classes, so measured entries apply to optimizer dispatches too)."""
+    grouped = bucketize(list(enumerate(shapes)), policy,
+                        key_fn=lambda t: (t[1][0], t[1][1], t[1][2], mode))
+    return {key: [i for i, _ in members] for key, members in grouped.items()}
 
 
 def bucketize(requests: Sequence, policy: BucketingPolicy,

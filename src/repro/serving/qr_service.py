@@ -23,6 +23,11 @@ The pipeline per :meth:`QRService.flush`:
 exposed via :meth:`QRService.stats`, so a steady-state stream (warmed
 cache) performs ZERO recompilations — asserted in
 tests/test_qr_service.py, measured by benchmarks/bench_qr_serving.py.
+The LRU is additionally keyed on the active measured tuning cache's
+fingerprint (:func:`repro.tuning.cache.active_cache_info`): bucket
+executables bake in tuned dispatch-mode routing, so installing a fresh
+sweep invalidates every cached plan (``plan_invalidations`` counter) and
+they recompile lazily under the new measurements.
 
 Zero padding is numerically free (padded rows/cols factor to
 exactly-zero reflectors), and the batched engine is bitwise-equal per
@@ -42,7 +47,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.observability import metrics as _metrics
 from repro.observability import trace as _trace
@@ -85,6 +89,18 @@ class QRResult:
     r: Array
 
 
+def _tuning_fingerprint() -> Tuple:
+    """Identity of the active measured tuning cache (source + contents
+    summary).  Compiled bucket plans bake in tuned routing decisions
+    (dispatch mode per shape class), so a cache refresh — a new sweep
+    installed via ``set_active_cache`` or ``$REPRO_TUNING_CACHE`` — must
+    invalidate them; the plan LRU is keyed on this fingerprint."""
+    from repro.tuning import cache as _tcache
+
+    info = _tcache.active_cache_info()
+    return (info["source"], info["entries"], tuple(info["classes"]))
+
+
 @dataclasses.dataclass(frozen=True)
 class _BucketPlan:
     """One AOT-compiled bucket executable (the plan-cache value)."""
@@ -100,27 +116,17 @@ class _BucketPlan:
 def _solve_bucket(stacked: Array, *, p: int, q: int, nb: int, mode: str,
                   use_kernel: bool, interpret: bool,
                   dispatch_mode: Optional[str]):
-    """The traced bucket program: split tiles, factor the whole stack in
-    one batched engine dispatch, join R (and form Q) per slice.  Runs
-    on PADDED shapes; per-request unpadding happens host-side."""
-    from repro.core import engine
-    from repro.core.tilegraph import _form_q_tiled, _join_tiles, _split_tiles
+    """The traced bucket program: one batched engine dispatch for the
+    whole stack via the shared :func:`repro.core.tilegraph
+    ._factor_stack_padded` lowering (the same program the optimizer's
+    shape-class dispatch lowers through).  Runs on PADDED shapes and
+    returns FULL padded factors (the donated staged buffer can alias an
+    output); per-request unpadding happens host-side."""
+    from repro.core.tilegraph import _factor_stack_padded
 
-    b = stacked.shape[0]
-    tiles = jax.vmap(lambda x: _split_tiles(x, p, q, nb))(stacked)
-    f = engine.factor_tiles_batched(tiles, p=p, q=q, nb=nb,
-                                    use_kernel=use_kernel,
-                                    interpret=interpret,
-                                    dispatch_mode=dispatch_mode)
-    r_full = jax.vmap(lambda t: jnp.triu(_join_tiles(t)))(f.tiles)
-    if mode == "r":
-        return (r_full,)
-    ncols = min(p * nb, q * nb)
-    form = lambda *fs: _form_q_tiled(  # noqa: E731
-        engine.FactorState(*fs), ncols=ncols)
-    q_full = (form(*(x[0] for x in f))[None] if b == 1
-              else jax.vmap(form)(*f))
-    return (q_full, r_full)
+    return _factor_stack_padded(stacked, p=p, q=q, nb=nb, mode=mode,
+                                use_kernel=use_kernel, interpret=interpret,
+                                dispatch_mode=dispatch_mode)
 
 
 class QRService:
@@ -159,6 +165,7 @@ class QRService:
         self._plans: "collections.OrderedDict[Tuple[BucketKey, int], _BucketPlan]" \
             = collections.OrderedDict()
         self._pending: List[QRRequest] = []
+        self._tuning_fp = _tuning_fingerprint()
         self._next_rid = 0
         # Counters live in the process-global metrics registry under this
         # instance's ``service`` label; stats() is a view over them.
@@ -208,6 +215,16 @@ class QRService:
     # --------------------------------------------------------- plan cache
 
     def _plan_for(self, key: BucketKey, batch: int) -> _BucketPlan:
+        fp = _tuning_fingerprint()
+        if fp != self._tuning_fp:
+            # Tuning-cache refresh: every cached executable may have been
+            # built under routing the new measurements contradict — drop
+            # them all (they recompile lazily on next use).
+            self._tuning_fp = fp
+            if self._plans:
+                self._count("plan_invalidations")
+                self._count("cache_evictions", len(self._plans))
+                self._plans.clear()
         cache_key = (key, batch)
         plan = self._plans.get(cache_key)
         if plan is not None:
@@ -234,7 +251,20 @@ class QRService:
         itemsize = np.dtype(key.dtype).itemsize
         dispatch_mode = self.dispatch_mode
         if self.use_kernel and dispatch_mode is None:
-            dispatch_mode = engine.resolve_dispatch_mode(p, q, nb, itemsize)
+            # Measured tuning entries (same pow2-ish shape classes as the
+            # bucket edges) take precedence over the engine's budget
+            # rule — this is what the fingerprint invalidation protects.
+            from repro.tuning import cache as _tcache
+
+            entry = _tcache.active_cache().lookup(
+                backend=jax.default_backend(), m=key.m, n=key.n,
+                dtype=np.dtype(key.dtype))
+            if (entry is not None and entry.best.use_kernel
+                    and entry.best.dispatch_mode is not None):
+                dispatch_mode = entry.best.dispatch_mode
+            else:
+                dispatch_mode = engine.resolve_dispatch_mode(p, q, nb,
+                                                             itemsize)
         interpret = (macro_ops.default_interpret()
                      if self.interpret is None else self.interpret)
         fn = jax.jit(
@@ -355,6 +385,7 @@ class QRService:
             cache_hits=hits,
             cache_misses=self._count_value("cache_misses"),
             cache_evictions=self._count_value("cache_evictions"),
+            plan_invalidations=self._count_value("plan_invalidations"),
             plans_cached=len(self._plans),
             padded_slots=padded,
             bucket_fill_ratio=(served / slots) if slots else 1.0,

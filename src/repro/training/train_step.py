@@ -44,6 +44,8 @@ class TrainConfig:
     loss_chunk: int = 512           # fused-CE sequence chunk
     qr_q_method: str = "formq"      # "formq" (paper) | "solve" (optimized)
     qr_shard_leaves: bool = False   # layer-shard the QR stacks (see qr_muon)
+    batched_ortho: bool = False     # one QR dispatch per shape class
+                                    # (repro.optim.batched_ortho)
     cast_params_once: bool = False  # bf16-cast weights before the microbatch
                                     # scan (halves FSDP gather bytes)
 
@@ -194,7 +196,8 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
                                       weight_decay=train_cfg.weight_decay,
                                       method=method,
                                       qr_q_method=train_cfg.qr_q_method,
-                                      qr_shard_leaves=train_cfg.qr_shard_leaves)
+                                      qr_shard_leaves=train_cfg.qr_shard_leaves,
+                                      batched_ortho=train_cfg.batched_ortho)
         metrics = dict(metrics, loss=loss, grad_norm=gnorm)
         return TrainState(params=params, opt=opt, ef_error=ef), metrics
 

@@ -1,0 +1,258 @@
+"""Batched optimizer-step orthogonalization: shape-class routing and
+batched-vs-leafwise parity.
+
+The load-bearing claims:
+
+  * a step's 2-D matrices partition into shape classes and the dispatch
+    count is O(classes), not O(leaves) — asserted on the pure
+    ``plan_batched_ortho`` query;
+  * the batched answer IS the leafwise answer: same pytree through
+    ``batched_orthogonalize`` and per-matrix ``qr_orthogonalize_2d``
+    matches within the conformance tolerance rule (100 * eps * max(m, n)
+    — sign-fixed thin Q is unique for full-rank input, so the two
+    dispatch schedules target the same matrix), and BITWISE where the
+    batched path falls back to the identical leafwise function
+    (singleton classes);
+  * ``muon_update(batched_ortho=True)`` is a drop-in: same params/state
+    out (to tolerance), same tree structure, jit-compatible.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (
+    DEFAULT_ORTHO_POLICY, muon_init, muon_update, plan_batched_ortho,
+    qr_orthogonalize_2d,
+)
+from repro.optim.batched_ortho import batched_orthogonalize
+from repro.serving.bucketing import BucketingPolicy
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(shape):
+    return 100.0 * float(jnp.finfo(jnp.float32).eps) * max(shape[-2:])
+
+
+def _leafwise(leaf, **kw):
+    stack = leaf.reshape((-1,) + leaf.shape[-2:])
+    qs = [qr_orthogonalize_2d(stack[i], **kw) for i in range(stack.shape[0])]
+    return jnp.stack(qs).reshape(leaf.shape)
+
+
+def _assert_parity(leaves, outs, **kw):
+    for leaf, o in zip(leaves, outs):
+        assert o.shape == leaf.shape and o.dtype == leaf.dtype
+        ref = _leafwise(leaf, **kw)
+        err = float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        assert err <= _tol(leaf.shape), (leaf.shape, err, _tol(leaf.shape))
+
+
+def _mk(shapes, key=KEY, dtype=jnp.float32):
+    ks = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, s, jnp.float32).astype(dtype)
+            for k, s in zip(ks, shapes)]
+
+
+# ------------------------------------------------------------- planning
+
+
+def test_plan_dispatch_count_is_classes_not_leaves():
+    """The headline: 5 leaves / 13 matrices over 2 repeated shapes plan
+    to 2 batched dispatches (plus the singleton's leafwise fallback)."""
+    shapes = [((3, 48, 48), np.float32), ((3, 48, 48), np.float32),
+              ((3, 96, 48), np.float32), ((3, 48, 96), np.float32),
+              ((40, 24), np.float32)]
+    plan = plan_batched_ortho(shapes)
+    assert plan.n_leaves == 5 and plan.n_matrices == 13
+    routes = {(c.key.m, c.key.n): c.route for c in plan.classes}
+    # wide 48x96 orients tall into the 96x48 class
+    assert routes == {(48, 48): "batched", (96, 48): "batched",
+                      (48, 32): "leafwise"}
+    assert plan.dispatches == 3          # 2 batched + 1 singleton
+    assert plan.batched_matrices == 12 and plan.leafwise_matrices == 1
+    # every matrix is owned by exactly one class
+    owned = sorted(i for c in plan.classes for i in c.members)
+    assert owned == list(range(13))
+
+
+def test_plan_singleton_class_routes_leafwise():
+    plan = plan_batched_ortho([((64, 32), np.float32)])
+    (cls,) = plan.classes
+    assert cls.route == "leafwise" and "singleton" in cls.reason
+    assert plan.dispatches == 1
+
+
+def test_plan_batched_class_carries_explain_trail():
+    """Batched classes keep the planner's full decision trail (the
+    explain contract: every routing choice is auditable)."""
+    plan = plan_batched_ortho([((48, 48), np.float32)] * 3)
+    (cls,) = plan.classes
+    assert cls.route == "batched" and cls.method is not None
+    assert cls.explain is not None
+    sel = cls.explain.selected
+    assert sel is not None and sel.rule in cls.reason
+
+
+def test_plan_rejects_vector_leaves():
+    with pytest.raises(ValueError):
+        plan_batched_ortho([((64,), np.float32)])
+
+
+def test_plan_merges_ragged_shapes_at_tile_granularity():
+    """Off-tile shapes tile-round into the class of their rounded-up
+    neighbors, so near-miss raggedness still batches."""
+    plan = plan_batched_ortho([((45, 30), np.float32),
+                               ((48, 32), np.float32)])
+    (cls,) = plan.classes       # both land in the padded 48x32 class
+    assert (cls.key.m, cls.key.n) == (48, 32)
+    assert len(cls.members) == 2 and cls.route == "batched"
+
+
+# --------------------------------------------------------------- parity
+
+
+def test_parity_ragged_mix():
+    """Ragged shape mix — square, tall, wide, off-tile, stacked — through
+    both schedules: every member matches within the conformance rule."""
+    shapes = [(48, 48), (96, 48), (48, 96), (45, 30), (3, 48, 48),
+              (2, 2, 48, 48)]
+    leaves = _mk(shapes)
+    outs = batched_orthogonalize(leaves)
+    _assert_parity(leaves, outs)
+
+
+def test_parity_singleton_fallback_is_bitwise():
+    """A singleton class runs the very same qr_orthogonalize_2d the
+    leafwise path runs — bitwise equality, not just tolerance."""
+    (leaf,) = _mk([(56, 24)])
+    (out,) = batched_orthogonalize([leaf])
+    ref = qr_orthogonalize_2d(leaf)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_parity_bf16_storage():
+    """bf16 leaves: batched classes accumulate in fp32 (class compute
+    dtype = promote_types) and return bf16, same as the leafwise path."""
+    leaves = _mk([(48, 48), (48, 48), (96, 48)], dtype=jnp.bfloat16)
+    outs = batched_orthogonalize(leaves)
+    assert all(o.dtype == jnp.bfloat16 for o in outs)
+    _assert_parity(leaves, outs)
+
+
+def test_parity_inside_jit():
+    """The executor's routing is static over shapes — the whole thing
+    traces under jit and matches the eager result."""
+    leaves = _mk([(3, 48, 48), (96, 48), (40, 24)])
+    eager = batched_orthogonalize(leaves)
+    jitted = jax.jit(lambda ls: batched_orthogonalize(ls))(leaves)
+    for a, b in zip(eager, jitted):
+        assert float(jnp.max(jnp.abs(a - b))) <= _tol(a.shape)
+
+
+def test_precomputed_plan_reuse():
+    """A plan built from the shapes alone drives the executor (what the
+    bench does: count dispatches without running, then run)."""
+    leaves = _mk([(48, 48), (48, 48), (96, 48), (96, 48)])
+    plan = plan_batched_ortho([(tuple(l.shape), l.dtype) for l in leaves])
+    outs = batched_orthogonalize(leaves, ortho_plan=plan)
+    _assert_parity(leaves, outs)
+    assert plan.dispatches == 2
+
+
+def test_custom_policy_changes_classes():
+    """A coarser policy merges shapes into fewer classes (tile-48 pads
+    both 40x40 and 48x48 to 48x48; tile-8 keeps them apart) — routing
+    follows the policy."""
+    shapes = [((40, 40), np.float32), ((48, 48), np.float32)]
+    fine = plan_batched_ortho(
+        shapes, policy=BucketingPolicy(tile=8, max_waste=0.0))
+    coarse = plan_batched_ortho(
+        shapes, policy=BucketingPolicy(tile=48, max_waste=0.25))
+    assert len(fine.classes) == 2 and len(coarse.classes) == 1
+    assert coarse.dispatches == 1
+
+
+# ---------------------------------------------------------- muon_update
+
+
+def _lm_like():
+    ks = jax.random.split(KEY, 9)
+    mk = lambda s, k: 0.02 * jax.random.normal(k, s, jnp.float32)  # noqa
+    params = {
+        "embed": {"table": mk((128, 48), ks[0])},
+        "layers": {
+            "wq": mk((3, 48, 48), ks[1]), "wk": mk((3, 48, 48), ks[2]),
+            "wv": mk((3, 48, 48), ks[3]), "wo": mk((3, 48, 48), ks[4]),
+            "w_in": mk((3, 96, 48), ks[5]), "w_out": mk((3, 48, 96), ks[6]),
+            "g": mk((3, 48), ks[7]),
+        },
+    }
+    grads = jax.tree.map(
+        lambda p: 0.1 * jax.random.normal(ks[8], p.shape, p.dtype), params)
+    return params, grads
+
+
+def test_muon_update_batched_matches_leafwise():
+    params, grads = _lm_like()
+    state = muon_init(params)
+    p_ref, s_ref = muon_update(grads, state, params, lr=0.02)
+    p_bat, s_bat = muon_update(grads, state, params, lr=0.02,
+                               batched_ortho=True)
+    assert jax.tree_util.tree_structure(p_ref) == \
+        jax.tree_util.tree_structure(p_bat)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_bat)):
+        assert float(jnp.max(jnp.abs(a - b))) <= _tol(
+            a.shape if a.ndim >= 2 else (1, 1))
+    # momentum/second-moment state is orthogonalization-free: bitwise
+    for a, b in zip(jax.tree.leaves(s_ref.mu), jax.tree.leaves(s_bat.mu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_ref.nu), jax.tree.leaves(s_bat.nu)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_muon_update_batched_under_jit_two_steps():
+    import functools
+
+    params, grads = _lm_like()
+    state = muon_init(params)
+    step = jax.jit(functools.partial(muon_update, lr=0.02,
+                                     batched_ortho=True))
+    p1, s1 = step(grads, state, params)
+    p2, s2 = step(grads, s1, p1)
+    assert int(s2.step) == 2
+    for leaf in jax.tree.leaves(p2):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_muon_update_batched_emits_dispatch_metrics():
+    """The optim.* counters record the dispatch economy at trace time."""
+    from repro.observability import metrics as obs
+
+    params, grads = _lm_like()
+    state = muon_init(params)
+    d0 = obs.counter_value("optim.ortho_dispatches", route="batched")
+    muon_update(grads, state, params, lr=0.02, batched_ortho=True)
+    assert obs.counter_value("optim.ortho_dispatches",
+                             route="batched") > d0
+
+
+def test_default_policy_pads_at_tile_granularity():
+    """The optimizer policy pads to tile multiples ONLY (max_waste=0):
+    parameter shapes are a static set whose classes form from exact
+    repeats, so pow2-ish coarsening would buy no merging while costing
+    cubic flops (serving's edges pad 576 -> 768, ~2.4x the QR work)."""
+    assert DEFAULT_ORTHO_POLICY.tile == 16
+    assert DEFAULT_ORTHO_POLICY.max_waste == 0.0
+    from repro.serving.bucketing import pad_dim
+
+    kw = dict(tile=DEFAULT_ORTHO_POLICY.tile,
+              max_waste=DEFAULT_ORTHO_POLICY.max_waste)
+    for d in (48, 96, 576, 1536):     # LM widths pad to themselves
+        assert pad_dim(d, **kw) == d
+    assert pad_dim(45, **kw) == 48    # ragged shapes still merge
+    assert pad_dim(576, tile=32, max_waste=0.25) == 768  # what we avoid

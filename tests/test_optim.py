@@ -111,6 +111,39 @@ def test_muon_update_is_orthogonal_direction():
     np.testing.assert_allclose(o.T @ o, np.eye(32), atol=2e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float16])
+def test_qr_orthogonalize_respects_param_dtype(dtype):
+    """Regression: the orthogonalizer used to hardcode an fp32 plan, so
+    low-precision storage params silently changed dtype through it.  It
+    must return Q in the param dtype while ACCUMULATING in fp32 — the
+    result must match the fp32 factorization of the fp32-cast input to
+    storage-rounding error, not fp16/bf16-accumulation error."""
+    m = jax.random.normal(KEY, (96, 40), jnp.float32).astype(dtype)
+    q = qr_orthogonalize_2d(m)
+    assert q.dtype == dtype
+    # fp32 accumulation: q is the fp32 result rounded ONCE to storage.
+    q_ref = qr_orthogonalize_2d(m.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(q, np.float32), np.asarray(q_ref.astype(dtype),
+                                              np.float32), rtol=0, atol=0)
+    # Orthogonality at storage precision.
+    g = np.asarray(q.astype(jnp.float32))
+    eps = float(jnp.finfo(dtype).eps)
+    assert np.abs(g.T @ g - np.eye(40)).max() < 10 * eps
+
+
+def test_qr_orthogonalize_f64_keeps_f64():
+    """promote_types(f64, f32) = f64: double-precision params must not
+    round-trip through fp32 (x64 off: jnp silently yields f32 arrays, so
+    the assert still checks dtype-in == dtype-out)."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 24)))
+    q = qr_orthogonalize_2d(x)
+    assert q.dtype == x.dtype
+    gram = np.asarray(q.astype(jnp.float64)).T @ np.asarray(
+        q.astype(jnp.float64))
+    assert np.abs(gram - np.eye(24)).max() < 1e-6
+
+
 def test_warmup_cosine_schedule():
     lr = [float(warmup_cosine(s, peak_lr=1.0, warmup_steps=10,
                               total_steps=100)) for s in range(101)]

@@ -267,3 +267,42 @@ def test_plan_cache_lru_eviction():
     go((64, 32))   # B was the LRU victim -> miss, recompile
     s = svc.stats()
     assert s["compiles"] == 4 and s["cache_evictions"] == 2
+
+
+def test_tuning_refresh_invalidates_plans():
+    """A tuning-cache swap must invalidate every resident bucket plan:
+    compiled plans bake in routing/dispatch decisions the old cache
+    informed, so serving a stale plan under a new cache silently ignores
+    the measurements.  The service fingerprints the active cache and
+    drops its LRU on change, counting ``plan_invalidations``."""
+    from repro.tuning.cache import TuningCache, active_cache, set_active_cache
+
+    rng = np.random.default_rng(11)
+    svc = QRService(policy=BucketingPolicy(tile=16, max_batch=4),
+                    use_kernel=False)
+
+    def go(shape):
+        svc.submit_many([rng.standard_normal(shape).astype(np.float32)])
+
+    prev = active_cache()
+    try:
+        go((48, 48))
+        s = svc.stats()
+        assert s["plans_cached"] > 0 and s["plan_invalidations"] == 0
+        compiles = s["compiles"]
+
+        go((48, 48))    # same cache: steady state, no invalidation
+        assert svc.stats()["compiles"] == compiles
+        assert svc.stats()["plan_invalidations"] == 0
+
+        set_active_cache(TuningCache(source="test:refresh"))
+        go((48, 48))    # new fingerprint: plans dropped, recompile
+        s = svc.stats()
+        assert s["plan_invalidations"] == 1
+        assert s["compiles"] == compiles + 1
+
+        go((48, 48))    # new cache is now the steady state
+        assert svc.stats()["plan_invalidations"] == 1
+        assert svc.stats()["compiles"] == compiles + 1
+    finally:
+        set_active_cache(prev)
