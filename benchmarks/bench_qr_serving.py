@@ -139,9 +139,77 @@ def _bench_config(label, mix, waves, *, use_kernel, dispatch_mode, tile,
     ), stats
 
 
-def sweep(smoke: bool = False) -> list:
+def _bench_chaos(mix, waves, *, tile, max_batch, seed=0,
+                 fault_frac=0.05):
+    """The ``--chaos`` record: the same stream with verification ON and
+    a ~``fault_frac`` injected-fault mix — poisoned (NaN) payloads that
+    admission must quarantine, plus armed output-corruption faults the
+    per-slice health check must catch and heal.  Reports latency
+    percentiles UNDER chaos next to the escalation/quarantine counts, so
+    the trajectory prices what hardening costs when things actually go
+    wrong (the clean-stream twin prices verify-off overhead: zero)."""
+    from repro.robustness import inject as _inject
+
+    rng = np.random.default_rng(seed)
+    svc = QRService(
+        policy=BucketingPolicy(tile=tile, max_batch=max_batch),
+        use_kernel=False, verify=True)
+    svc.submit_many(_mk_wave(mix, rng))      # warm compiles
+    n_total = waves * len(mix)
+    n_faults = max(1, int(fault_frac * n_total))
+    # Half the fault budget corrupts inputs (quarantine path), half
+    # corrupts dispatch outputs (health-check -> escalation path).
+    stream = []
+    poisoned = 0
+    for w in range(waves):
+        wave = _mk_wave(mix, rng)
+        if poisoned < n_faults // 2 + n_faults % 2:
+            wave[w % len(wave)] = _inject.poison(
+                wave[w % len(wave)], kind="nan", seed=seed + w)
+            poisoned += 1
+        stream.append(wave)
+    out_faults = inject_faults = n_faults // 2
+    with _inject.active(_inject.Fault(site="output", match="",
+                                      times=out_faults, slice_index=0)):
+        lat, wall = _serve_stream(svc, stream, per_request=False)
+    stats = svc.stats()
+    nmat = n_total
+    flops = waves * sum(_qr_flops(m, n) for m, n in mix)
+    metrics = dict(
+        dispatches=stats["dispatches"], compiles=stats["compiles"],
+        quarantined=stats["quarantined"],
+        escalations=stats["escalations"],
+        health_check_failures=stats["health_check_failures"],
+        breaker_trips=stats["breaker_trips"],
+        injected_input_faults=poisoned,
+        injected_output_faults=inject_faults,
+    )
+    return dict(
+        method="qr_service[chaos]",
+        m=max(s[0] for s in mix), n=max(s[1] for s in mix),
+        dtype="float32",
+        wall_us=float(np.percentile(lat, 50) * 1e6),
+        gflops=flops / wall / 1e9,
+        engine=False, dispatch_mode=None,
+        p50_us=float(np.percentile(lat, 50) * 1e6),
+        p99_us=float(np.percentile(lat, 99) * 1e6),
+        matrices_per_s=nmat / wall,
+        bucket_fill_ratio=stats["bucket_fill_ratio"],
+        cache_hit_rate=stats["cache_hit_rate"],
+        dispatches=stats["dispatches"],
+        matrices_served=stats["matrices_served"],
+        quarantined=stats["quarantined"],
+        escalations=stats["escalations"],
+        fault_frac=fault_frac,
+        shape_mix=[list(s) for s in mix],
+        metrics=metrics,
+    ), stats
+
+
+def sweep(smoke: bool = False, chaos: bool = False) -> list:
     """Run the serving stream(s); returns qr-bench-v2-compatible records
-    (run.py merges them into BENCH_qr.json next to the method sweep)."""
+    (run.py merges them into BENCH_qr.json next to the method sweep).
+    ``chaos`` appends the injected-fault record (verify on, ~5% faults)."""
     mix = _SMOKE_MIX if smoke else _FULL_MIX
     waves = 4 if smoke else 8
     tile = 16 if smoke else 32
@@ -157,19 +225,34 @@ def sweep(smoke: bool = False) -> list:
                                    max_batch=16)
         print(f"# {label} service stats: {stats}", file=sys.stderr)
         records.append(rec)
+    if chaos:
+        rec, stats = _bench_chaos(mix, waves, tile=tile, max_batch=16)
+        print(f"# qr_service[chaos] service stats: {stats}",
+              file=sys.stderr)
+        records.append(rec)
     return records
 
 
 def rows(records: list) -> list:
-    """Format serving records as the harness's CSV rows."""
-    return [
-        (f"qr_serving_{r['method']}", r["p50_us"],
-         f"p99_us={r['p99_us']:.1f};mat_per_s={r['matrices_per_s']:.1f};"
-         f"speedup={r['speedup_vs_unbatched']:.2f};"
-         f"fill={r['bucket_fill_ratio']:.2f};"
-         f"cache_hit={r['cache_hit_rate']:.2f}")
-        for r in records
-    ]
+    """Format serving records as the harness's CSV rows.  Chaos records
+    trade the unbatched-baseline column for escalation/quarantine
+    counts."""
+    out = []
+    for r in records:
+        if "escalations" in r:
+            derived = (f"p99_us={r['p99_us']:.1f};"
+                       f"mat_per_s={r['matrices_per_s']:.1f};"
+                       f"quarantined={r['quarantined']};"
+                       f"escalations={r['escalations']};"
+                       f"fault_frac={r['fault_frac']:.2f}")
+        else:
+            derived = (f"p99_us={r['p99_us']:.1f};"
+                       f"mat_per_s={r['matrices_per_s']:.1f};"
+                       f"speedup={r['speedup_vs_unbatched']:.2f};"
+                       f"fill={r['bucket_fill_ratio']:.2f};"
+                       f"cache_hit={r['cache_hit_rate']:.2f}")
+        out.append((f"qr_serving_{r['method']}", r["p50_us"], derived))
+    return out
 
 
 def run(smoke: bool = False) -> list:
@@ -180,10 +263,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shape mix + interpret-mode kernel twin")
+    ap.add_argument("--chaos", action="store_true",
+                    help="append the injected-fault record: verify on, "
+                         "~5%% poisoned/corrupted requests, escalation "
+                         "and quarantine counts next to the percentiles")
     ap.add_argument("--json", default="BENCH_qr_serving.json", metavar="PATH",
                     help="where to write serving records (standalone runs)")
     args = ap.parse_args()
-    records = sweep(smoke=args.smoke)
+    records = sweep(smoke=args.smoke, chaos=args.chaos)
     print("name,us_per_call,derived")
     for name, us, derived in rows(records):
         print(f"{name},{us:.1f},{derived}")

@@ -43,6 +43,11 @@ def main() -> None:
                     help="comma-separated prefixes to run")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced QR sweep only (CI kernel smoke)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="append the serving chaos record (verify on, "
+                         "~5%% injected-fault mix — latency percentiles "
+                         "plus escalation/quarantine counts) to the "
+                         "BENCH_qr.json trajectory")
     ap.add_argument("--json", default="BENCH_qr.json", metavar="PATH",
                     help="where to write the QR sweep records")
     args = ap.parse_args()
@@ -62,7 +67,10 @@ def main() -> None:
 
             mod = importlib.import_module(modname)
             if label in _QR_RECORD_MODULES:
-                records = mod.sweep(smoke=args.smoke)
+                if label == "qr_serving":
+                    records = mod.sweep(smoke=args.smoke, chaos=args.chaos)
+                else:
+                    records = mod.sweep(smoke=args.smoke)
                 qr_records = (qr_records or []) + records
                 rows = mod.rows(records)
             else:

@@ -144,6 +144,26 @@ def main():
           f"cache_hit_rate={s['cache_hit_rate']:.2f} "
           f"fill={s['bucket_fill_ratio']:.2f} worst_rec={worst:.2e}")
 
+    # 4b'. robustness: the service survives a poisoned batch.  Admission
+    #     quarantines the NaN request (named reason, bucket-mates
+    #     untouched), and with verify=True every dispatch is
+    #     health-checked against the conformance tolerance — failures
+    #     walk the escalation ladder megakernel -> wavefront -> oracle
+    #     -> lapack, each hop counted.
+    from repro.robustness import inject
+
+    hardened = QRService(policy=BucketingPolicy(tile=16, max_batch=8),
+                         use_kernel=False, verify=True)
+    poisoned = list(mix)
+    poisoned[1] = inject.poison(poisoned[1], kind="nan")  # seeded corruption
+    hres = hardened.submit_many(poisoned)
+    hs = hardened.stats()
+    clean_ok = all(res.ok for i, res in enumerate(hres) if i != 1)
+    print(f"{'robust':10s} poisoned request -> {hres[1].error} "
+          f"(clean {sum(r.ok for r in hres)}/{len(hres)} ok={clean_ok}, "
+          f"quarantined={hs['quarantined']}, "
+          f"escalations={hs['escalations']})")
+
     # 4c. observability: plan(explain=True) attaches the machine-readable
     #     routing trail (why THIS method, every fallback by name), and
     #     the off-by-default tracer records nested spans — exportable as

@@ -70,7 +70,21 @@ def qr(a: Array, *, config: Optional[QRConfig] = None
     if a.ndim < 2:
         raise ValueError(f"qr expects a matrix, got shape {a.shape}")
     cfg = _DEFAULT if config is None else config
-    return plan(a.shape, a.dtype, cfg).solve(a)
+    solver = plan(a.shape, a.dtype, cfg)
+    if cfg.verify is not False and not isinstance(a, jax.core.Tracer):
+        # Health-checked path (QRConfig.verify / $REPRO_VERIFY): verify
+        # the planned result and walk the degradation ladder on failure
+        # (repro.robustness.escalate).  Resolution is host-side and
+        # never fires under a trace, so verify-off stays jaxpr-identical
+        # to solver.solve — the lazy import keeps the robustness layer
+        # out of the import graph until the knob is actually on.
+        from repro.robustness.verify import verify_enabled
+
+        if verify_enabled(cfg.verify):
+            from repro.robustness.escalate import checked_solve
+
+            return checked_solve(solver, a)
+    return solver.solve(a)
 
 
 def orthogonalize(m_in: Array, *, config: Optional[QRConfig] = None) -> Array:

@@ -1047,6 +1047,14 @@ def _check_dispatch(dtype, p: int, q: int, nb: int, use_kernel: bool,
         raise ValueError(
             f"unknown dispatch_mode {dispatch_mode!r}; expected one of "
             f"{DISPATCH_MODES} or None (auto)")
+    from repro.robustness import inject as _inject
+
+    if _inject.enabled():
+        # Chaos hook: a forced VMEM-budget rejection fires from the
+        # exact site a real over-budget workspace raises (trace time,
+        # Python level — no jaxpr impact), so the escalation ladder
+        # sees an indistinguishable failure.
+        _inject.check("vmem", f"p{p}q{q}nb{nb}:{dispatch_mode}")
     mode = "wavefront"
     if use_kernel:
         from repro.core.plan import kernel_table_budget, kernel_vmem_budget

@@ -197,6 +197,15 @@ class QRConfig:
                 defaults (method, block, dispatch_mode, q_method,
                 use_kernel); on a miss — or with False — routing falls
                 through to the heuristic rules, recording why.
+    verify:     post-dispatch health checks (relative residual +
+                orthogonality defect against the conformance tolerance
+                rule, :mod:`repro.robustness.verify`) with escalation
+                down the degradation ladder on failure.  Tri-state:
+                True/False force it; None (default) defers to the
+                ``REPRO_VERIFY`` environment default.  Resolution is
+                host-side and skipped under traces, so the off (and
+                traced) paths are jaxpr-identical to an unchecked
+                solve — pinned in tests/test_robustness.py.
     """
 
     method: str = "auto"
@@ -211,6 +220,7 @@ class QRConfig:
     ndomains: Optional[int] = None
     dispatch_mode: Optional[str] = None
     use_tuning_cache: bool = True
+    verify: Optional[bool] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -228,6 +238,10 @@ class QRConfig:
             raise ValueError(f"nblocks must be >= 1, got {self.nblocks}")
         if self.ndomains is not None and self.ndomains < 1:
             raise ValueError(f"ndomains must be >= 1, got {self.ndomains}")
+        if self.verify not in (None, True, False):
+            raise ValueError(
+                f"verify must be True, False, or None (env default), "
+                f"got {self.verify!r}")
 
     def replace(self, **changes) -> "QRConfig":
         return dataclasses.replace(self, **changes)

@@ -24,8 +24,18 @@ import jax
 from jax.sharding import Mesh
 
 from repro.distributed.sharding import largest_pow2 as _largest_pow2_leq
+from repro.observability import metrics as _metrics
 
 __all__ = ["StepWatchdog", "plan_elastic_mesh", "ElasticPlan"]
+
+
+def _median(xs: Sequence[float]) -> float:
+    """True median: even-length windows average the two middle samples
+    (the upper-middle pick alone biases the baseline high on bimodal
+    step-time histories, under-firing the straggler rule)."""
+    s = sorted(xs)
+    h = len(s) // 2
+    return s[h] if len(s) % 2 else 0.5 * (s[h - 1] + s[h])
 
 
 class StepWatchdog:
@@ -48,9 +58,10 @@ class StepWatchdog:
         dt = time.monotonic() - self._t0
         self._t0 = None
         if len(self._times) >= 5:
-            med = sorted(self._times)[len(self._times) // 2]
+            med = _median(self._times)
             if dt > self.threshold * med:
                 self.straggler_steps.append(step)
+                _metrics.counter("fault.straggler_steps").inc()
                 if self.on_straggler:
                     self.on_straggler(step, dt, med)
         self._times.append(dt)
@@ -62,7 +73,7 @@ class StepWatchdog:
     def median(self) -> float:
         if not self._times:
             return 0.0
-        return sorted(self._times)[len(self._times) // 2]
+        return _median(self._times)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -214,6 +214,41 @@ def _default_fallback(a: Array) -> Array:
     return qr_orthogonalize_2d(a)
 
 
+def _post_dispatch(q_stack: Array, label: str, *,
+                   verify: Optional[bool]):
+    """Robustness seam of one batched class dispatch: the chaos
+    output-corruption hook, then (verify knob on, eager values only —
+    host-side resolution never fires under a trace, keeping the
+    verify-off jit path jaxpr-identical) a per-slice orthogonality
+    health check.  Returns ``(q_stack, bad_slots)``; flagged slots
+    escalate batched -> leafwise in the caller, each hop counted under
+    ``robustness.escalations{from=batched, to=leafwise}``."""
+    if isinstance(q_stack, jax.core.Tracer):
+        return q_stack, frozenset()
+    from repro.robustness import inject as _inject
+
+    if _inject.enabled():
+        q_stack = _inject.corrupt_output(q_stack, f"ortho:{label}")
+    from repro.robustness.verify import check_ortho_batch, verify_enabled
+
+    if not verify_enabled(verify):
+        return q_stack, frozenset()
+    from repro.robustness import escalate as _escalate
+
+    bad = set()
+    reports = check_ortho_batch(q_stack)
+    for slot, rep in enumerate(reports):
+        if rep.ok:
+            continue
+        bad.add(slot)
+        _escalate.record(
+            "batched", "leafwise", "health_check_failed",
+            f"class {label} slot {slot}: {rep.reason} "
+            f"defect={rep.ortho_defect:.3e} tol={rep.tol:.3e}")
+        _metrics.counter("optim.ortho_escalations", bucket=label).inc()
+    return q_stack, bad
+
+
 def batched_orthogonalize(leaves: Sequence[Array], *,
                           policy: Optional[BucketingPolicy] = None,
                           config: Optional[QRConfig] = None,
@@ -285,8 +320,18 @@ def batched_orthogonalize(leaves: Sequence[Array], *,
                              (0, cls.key.n - geom[j][1])))
                     for j in cls.members])
                 q_stack = solver.orthogonalize(stacked)
+                q_stack, bad = _post_dispatch(q_stack, label,
+                                              verify=base.verify)
                 for slot, j in enumerate(cls.members):
                     m, n, transpose = geom[j]
+                    if slot in bad:
+                        # Per-slice escalation: the batched dispatch's
+                        # flagged slice alone re-solves leafwise; its
+                        # class-mates ship as-is.
+                        q = fallback(members[j].astype(compute)).astype(
+                            leaves[ortho_plan.member_leaf[j]].dtype)
+                        out[j] = q.T if transpose else q
+                        continue
                     q = q_stack[slot, :m, :n].astype(leaves[
                         ortho_plan.member_leaf[j]].dtype)
                     out[j] = q.T if transpose else q

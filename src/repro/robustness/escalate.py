@@ -1,0 +1,263 @@
+"""The degradation ladder: retry a failed request DOWN, deterministically.
+
+When a dispatch fails — its AOT compile raised, the execution raised,
+or the post-dispatch health check rejected the output — the request is
+not lost and not poisoned: it re-runs on the next rung of a fixed
+ladder, each hop recorded as a named, ``RouteDecision``-style reason
+and counted under ``robustness.escalations{from, to, reason}``:
+
+    megakernel  ->  wavefront  ->  oracle  ->  lapack
+
+  * ``megakernel``: the persistent single-``pallas_call`` lowering
+    (fastest, most machinery in the blast radius);
+  * ``wavefront``:  one Pallas dispatch per DAG level (same kernels,
+    simpler launch path — survives task-table/scalar-prefetch issues);
+  * ``oracle``:     the bitwise-identical jnp lowering of the same
+    schedule (``use_kernel=False`` — no Pallas at all);
+  * ``lapack``:     ``jnp.linalg.qr`` on the raw, unpadded request (the
+    reference implementation; if THIS fails verification the input is
+    the problem, not the realization).
+
+The ladder is strictly monotone — a request never climbs back up — and
+deterministic: the same failure on the same input takes the same hops
+(the chaos suite in tests/test_robustness.py asserts exactly which
+counters fire for each injected fault class).
+
+:class:`QRService` drives the ladder at bucket granularity (with a
+per-bucket circuit breaker — see serving/qr_service.py);
+:func:`checked_solve` drives it for the plain ``qr()`` path;
+``optim/batched_ortho.py`` uses a two-rung batched -> leafwise version
+of the same idea.  All of them emit through :func:`record` so the
+counter namespace is uniform.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.observability import metrics as _metrics
+from repro.observability import trace as _trace
+from repro.robustness import inject as _inject
+from repro.robustness import verify as _verify
+
+__all__ = [
+    "Escalation",
+    "EscalationExhausted",
+    "LADDER",
+    "checked_solve",
+    "classify",
+    "ladder_below",
+    "lapack_qr",
+    "record",
+    "solve_below",
+]
+
+#: The full ladder, fastest first.  Bucket plans start at whichever rung
+#: the planner/tuner picked for them; the jnp-oracle serving path starts
+#: at "oracle" (there is no kernel above it to fall back from).
+LADDER: Tuple[str, ...] = ("megakernel", "wavefront", "oracle", "lapack")
+
+
+@dataclasses.dataclass(frozen=True)
+class Escalation:
+    """One recorded hop — the RouteDecision of the failure path.
+
+    rule:   stable slug of WHY ("compile_failed", "dispatch_failed",
+            "health_check_failed", "breaker_open", "injected_compile",
+            ...) — the low-cardinality counter label
+    reason: the concrete arithmetic/exception text behind the hop
+    """
+
+    rung_from: str
+    rung_to: str
+    rule: str
+    reason: str = ""
+
+
+class EscalationExhausted(RuntimeError):
+    """Every rung failed; ``escalations`` holds the recorded hops."""
+
+    def __init__(self, msg: str, escalations: Sequence[Escalation]):
+        self.escalations = tuple(escalations)
+        super().__init__(msg)
+
+
+def classify(exc: BaseException, stage: str) -> str:
+    """Stable slug for a failure: injected faults keep their site name
+    (so chaos assertions can tell injected from organic), everything
+    else is named by the stage that raised."""
+    if isinstance(exc, _inject.InjectedFault):
+        return f"injected_{exc.site}"
+    return f"{stage}_failed"
+
+
+def record(rung_from: str, rung_to: str, rule: str,
+           reason: str = "") -> Escalation:
+    """Emit the ``robustness.escalations{from, to, reason}`` counter and
+    return the hop record."""
+    _metrics.counter("robustness.escalations",
+                     **{"from": rung_from, "to": rung_to,
+                        "reason": rule}).inc()
+    return Escalation(rung_from=rung_from, rung_to=rung_to, rule=rule,
+                      reason=reason)
+
+
+def ladder_below(rung: str) -> Tuple[str, ...]:
+    """The rungs strictly below ``rung`` (unknown rungs — e.g. the
+    api-path's "planned" pseudo-rung — see the whole ladder's safe
+    tail: oracle then lapack)."""
+    if rung in LADDER:
+        return LADDER[LADDER.index(rung) + 1:]
+    return LADDER[2:]
+
+
+def lapack_qr(a, mode: str = "reduced"):
+    """The bottom rung: ``jnp.linalg.qr`` on the raw request.  Returns
+    ``(q, r)`` with ``q=None`` for mode="r"."""
+    a = jnp.asarray(a)
+    if mode == "r":
+        return None, jnp.linalg.qr(a, mode="r")
+    q, r = jnp.linalg.qr(a, mode="reduced")
+    return q, r
+
+
+def _run_rung(rung: str, fn: Callable, tag: str):
+    """Execute one rung with the dispatch-site injection hook armed."""
+    _inject.check("dispatch", f"{tag}:{rung}")
+    return fn()
+
+
+def _health(a, q, r, mode: str) -> _verify.HealthReport:
+    if mode == "r" or q is None:
+        return _verify.check_r(a, r)
+    return _verify.check_qr(a, q, r)
+
+
+def solve_below(a, *, mode: str = "reduced", start: str = "oracle",
+                verify: bool = True, tag: str = "request"
+                ) -> Tuple[Optional[object], object, str,
+                           List[Escalation]]:
+    """Re-solve ONE raw (unpadded) request on the rungs below ``start``.
+
+    This is the per-request recovery path: when a batched dispatch's
+    health check flags a single slice, that slice alone walks down from
+    the bucket's rung — ``oracle`` re-solves it through the planner's
+    jnp lowering, ``lapack`` through ``jnp.linalg.qr`` — verifying each
+    attempt (when ``verify``).  Returns ``(q, r, rung_used,
+    escalations)``; raises :class:`EscalationExhausted` if every rung
+    below raises (a verification failure at the bottom rung returns the
+    lapack factors anyway — at that point the INPUT is suspect, which
+    admission should have caught, and the caller marks the result).
+    """
+    escalations: List[Escalation] = []
+    prev = start
+    rungs = ladder_below(start)
+    for i, rung in enumerate(rungs):
+        try:
+            with _trace.span("robustness.rung", rung=rung, tag=tag):
+                if rung == "lapack":
+                    q, r = _run_rung(rung, lambda: lapack_qr(a, mode), tag)
+                elif rung == "oracle":
+                    q, r = _run_rung(
+                        rung, lambda: _oracle_qr(a, mode), tag)
+                else:
+                    # Kernel rungs need a compiled bucket plan; a raw
+                    # single request re-solve skips straight to the
+                    # kernel-free realizations.
+                    continue
+        except Exception as e:  # noqa: BLE001 — every rung failure degrades
+            escalations.append(record(prev, _next(rungs, i),
+                                      classify(e, "dispatch"), str(e)))
+            prev = rung
+            continue
+        if verify:
+            rep = _health(a, q, r, mode)
+            if not rep.ok:
+                if rung == "lapack":
+                    return q, r, rung, escalations  # input is the suspect
+                escalations.append(record(
+                    rung, _next(rungs, i), "health_check_failed",
+                    f"{rep.reason}: residual={rep.residual:.3e} "
+                    f"defect={rep.ortho_defect:.3e} tol={rep.tol:.3e}"))
+                prev = rung
+                continue
+        return q, r, rung, escalations
+    raise EscalationExhausted(
+        f"every rung below {start!r} failed for {tag}", escalations)
+
+
+def _next(rungs: Sequence[str], i: int) -> str:
+    return rungs[i + 1] if i + 1 < len(rungs) else "none"
+
+
+def _oracle_qr(a, mode: str):
+    """The planner's kernel-free lowering of one request (eager jnp —
+    the degraded path trades compile caching for certainty)."""
+    from repro.core.plan import QRConfig, plan
+
+    a = jnp.asarray(a)
+    cfg = QRConfig(use_kernel=False,
+                   mode="r" if mode == "r" else "reduced")
+    solver = plan(a.shape, a.dtype, cfg)
+    out = solver.solve(a)
+    if mode == "r":
+        return None, out
+    return out
+
+
+def checked_solve(solver, a):
+    """The plain-``qr()`` escalation driver: run the planned solver,
+    health-check the result, and walk the ladder on failure.
+
+    Only called when the verify knob resolves ON and ``a`` is concrete
+    (never under a trace) — the verify-off path in repro.core.api calls
+    ``solver.solve`` directly, so disabling verification is
+    jaxpr-identical to not having this module at all (pinned in
+    tests/test_robustness.py).  Batched inputs (ndim > 2) check per
+    slice but re-solve whole (the api path has no per-slice scatter).
+    """
+    mode = solver.config.mode
+    tag = f"qr:{'x'.join(str(d) for d in a.shape)}"
+    try:
+        out = _run_rung("planned", lambda: solver.solve(a), tag)
+    except Exception as e:  # noqa: BLE001
+        record("planned", "oracle", classify(e, "dispatch"), str(e))
+        q, r, _, _ = solve_below(a, mode=mode, start="planned", tag=tag)
+        return r if mode == "r" else (q, r)
+    out = _inject.corrupt_output(out, tag)
+    if mode == "r":
+        q, r = None, out
+    else:
+        q, r = out
+    if a.ndim == 2:
+        rep = _health(a, q, r, mode)
+        ok = rep.ok
+        detail = rep.reason
+    elif a.ndim == 3:
+        reports = (_verify.check_batch(a, None, r) if q is None
+                   else _verify.check_batch(a, q, r))
+        bad = [i for i, rp in enumerate(reports) if not rp.ok]
+        ok = not bad
+        detail = f"slices {bad}: {reports[bad[0]].reason}" if bad else None
+    else:
+        return out  # deeper batching: verified at the vmap'd 3-D level
+    if ok:
+        return out
+    record("planned", "oracle", "health_check_failed", detail or "")
+    if a.ndim == 2:
+        q, r, _, _ = solve_below(a, mode=mode, start="planned",
+                                 verify=True, tag=tag)
+        return r if mode == "r" else (q, r)
+    # Batched api input: re-solve the failed slices individually.
+    q = None if q is None else jnp.asarray(q)
+    r = jnp.asarray(r)
+    for i in bad:
+        qi, ri, _, _ = solve_below(a[i], mode=mode, start="planned",
+                                   verify=True, tag=f"{tag}[{i}]")
+        r = r.at[i].set(ri)
+        if q is not None and qi is not None:
+            q = q.at[i].set(qi)
+    return r if mode == "r" else (q, r)

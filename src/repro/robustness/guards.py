@@ -1,0 +1,100 @@
+"""Input admission: reject a bad request BEFORE it contaminates a bucket.
+
+The serving layer stacks heterogeneous requests into one padded batch
+and factors the stack in one dispatch — which means a single NaN
+payload poisons every request sharing its bucket (the megakernel's
+macro-ops propagate non-finite values across the whole workspace, and
+the per-slice bitwise-parity guarantee faithfully reproduces garbage).
+Admission moves the failure to the cheapest possible point: an O(mn)
+host-side scan at ``QRService.submit``, quarantining the offender with
+a named reason while its bucket-mates proceed untouched.
+
+    from repro.robustness import guards
+
+    guards.admit(a)                      # raises AdmissionError or returns
+    guards.admit(a, policy=guards.AdmissionPolicy(max_cond=1e8))
+
+Named rejection reasons (``AdmissionError.reason`` — stable slugs the
+service surfaces per request and counts under
+``robustness.quarantined{reason=...}``):
+
+  * ``nonfinite_input``  — NaN/Inf anywhere in the payload
+  * ``bad_ndim``         — not a 2-D matrix
+  * ``non_float_dtype``  — integer/complex/bool payload (the engine's
+                           macro-ops are real-float realizations)
+  * ``ill_conditioned``  — exact 2-norm condition number above
+                           ``policy.max_cond`` (OPT-IN: costs an SVD,
+                           O(mn^2) — same order as the factorization
+                           itself, so it is a debugging/acceptance
+                           guard, not a steady-state one; ``max_cond``
+                           defaults to None = skip)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["AdmissionError", "AdmissionPolicy", "admit",
+           "estimate_condition"]
+
+
+class AdmissionError(ValueError):
+    """A request failed admission; ``reason`` is the stable slug."""
+
+    def __init__(self, reason: str, detail: str):
+        self.reason = reason
+        super().__init__(f"{reason}: {detail}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """What :func:`admit` enforces.  The default is the cheap, always-on
+    contract (finite 2-D float); ``max_cond`` opts into the expensive
+    conditioning guard."""
+
+    require_finite: bool = True
+    require_float: bool = True
+    max_cond: Optional[float] = None
+
+
+DEFAULT_ADMISSION = AdmissionPolicy()
+
+
+def estimate_condition(a: np.ndarray) -> float:
+    """2-norm condition number sigma_max / sigma_min via SVD (exact, and
+    priced accordingly — O(mn^2), the cost of the factorization it
+    guards).  Rank-deficient input returns inf."""
+    s = np.linalg.svd(np.asarray(a, dtype=np.float64), compute_uv=False)
+    if s.size == 0 or s[-1] == 0.0:
+        return float("inf")
+    return float(s[0] / s[-1])
+
+
+def admit(a: np.ndarray, *, policy: Optional[AdmissionPolicy] = None) -> None:
+    """Admission check; raises :class:`AdmissionError` with a named
+    reason, returns None on acceptance.  Order: cheap structural checks
+    first, the O(mn) finite scan next, the opt-in SVD guard last."""
+    policy = DEFAULT_ADMISSION if policy is None else policy
+    arr = np.asarray(a)
+    if arr.ndim != 2:
+        raise AdmissionError("bad_ndim",
+                             f"expected a matrix, got shape {arr.shape}")
+    if policy.require_float and arr.dtype.kind != "f":
+        raise AdmissionError(
+            "non_float_dtype",
+            f"expected a real floating dtype, got {arr.dtype}")
+    if policy.require_finite and arr.size \
+            and not bool(np.isfinite(arr).all()):
+        bad = int(arr.size - np.isfinite(arr).sum())
+        raise AdmissionError(
+            "nonfinite_input",
+            f"{bad} non-finite element(s) in a {arr.shape} payload")
+    if policy.max_cond is not None and min(arr.shape) > 0:
+        cond = estimate_condition(arr)
+        if cond > policy.max_cond:
+            raise AdmissionError(
+                "ill_conditioned",
+                f"cond_2(a) ~ {cond:.3e} > max_cond={policy.max_cond:.3e}")

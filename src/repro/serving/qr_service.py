@@ -13,21 +13,46 @@ grid, one task table shared across the batch.
 
 The pipeline per :meth:`QRService.flush`:
 
-    requests -> bucketize -> (plan cache: BucketKey x batch -> compiled
-    executable) -> stage bucket i+1's host->device transfer while bucket
-    i computes (donated input buffers) -> unpad + scatter results back
+    requests -> admission -> bucketize -> (plan cache: BucketKey x batch
+    -> compiled executable) -> stage bucket i+1's host->device transfer
+    while bucket i computes (donated input buffers) -> sync + health
+    check -> unpad + scatter results back
 
 **Compiled-plan cache.**  Plans are AOT-compiled
 (``jax.jit(...).lower(...).compile()``) and kept in an LRU keyed on
-``(BucketKey, padded_batch)``; hits, misses, evictions, and compiles are
-exposed via :meth:`QRService.stats`, so a steady-state stream (warmed
-cache) performs ZERO recompilations — asserted in
+``(BucketKey, padded_batch, rung)``; hits, misses, evictions, and
+compiles are exposed via :meth:`QRService.stats`, so a steady-state
+stream (warmed cache) performs ZERO recompilations — asserted in
 tests/test_qr_service.py, measured by benchmarks/bench_qr_serving.py.
 The LRU is additionally keyed on the active measured tuning cache's
 fingerprint (:func:`repro.tuning.cache.active_cache_info`): bucket
 executables bake in tuned dispatch-mode routing, so installing a fresh
 sweep invalidates every cached plan (``plan_invalidations`` counter) and
 they recompile lazily under the new measurements.
+
+**Failure hardening** (:mod:`repro.robustness`).  Three lines of
+defense, each named and counted:
+
+  * *Admission* — :meth:`submit` runs the finite/shape/dtype guard
+    (``admission`` policy); a rejected payload is **quarantined** (its
+    :class:`QRResult` carries ``error="quarantined:<reason>"``) instead
+    of poisoning the padded bucket it would have shared.
+  * *Verification* — with the ``verify`` knob on (``$REPRO_VERIFY``
+    default), every synced bucket is health-checked **per slice**
+    (residual + orthogonality against the conformance tolerance); only
+    the failing slices re-solve, the healthy bucket-mates ship as-is.
+  * *Escalation* — a failed AOT compile, dispatch, or health check
+    walks the degradation ladder megakernel -> wavefront -> oracle ->
+    lapack (:mod:`repro.robustness.escalate`), recording
+    ``robustness.escalations{from, to, reason}``.  A bucket that
+    escalates ``breaker_threshold`` times trips its **circuit
+    breaker**: its compiled plans are evicted and the bucket pins to
+    the lapack fallback until the tuning fingerprint changes.
+
+Flush is failure-atomic: if an exception does escape (escalation
+disabled, or a non-recoverable error), every request that has not been
+resolved into a result is restored to the pending queue before the
+exception propagates — no request is silently dropped.
 
 Zero padding is numerically free (padded rows/cols factor to
 exactly-zero reflectors), and the batched engine is bitwise-equal per
@@ -42,7 +67,7 @@ import dataclasses
 import functools
 import itertools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -50,6 +75,10 @@ import jax
 
 from repro.observability import metrics as _metrics
 from repro.observability import trace as _trace
+from repro.robustness import escalate as _escalate
+from repro.robustness import guards as _guards
+from repro.robustness import inject as _inject
+from repro.robustness import verify as _verify
 from repro.serving.bucketing import (
     BucketKey, BucketingPolicy, bucketize, pad_batch)
 
@@ -82,11 +111,21 @@ class QRRequest:
 
 @dataclasses.dataclass(frozen=True)
 class QRResult:
-    """Unpadded per-request answer; ``q`` is None for mode="r"."""
+    """Unpadded per-request answer; ``q`` is None for mode="r".
+
+    ``error`` is None for a healthy result; a quarantined or
+    unrecoverable request carries the named reason
+    (``"quarantined:nonfinite_input"``, ``"escalation_exhausted"``,
+    ...) and ``q``/``r`` may be None."""
 
     rid: int
     q: Optional[Array]
-    r: Array
+    r: Optional[Array]
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 def _tuning_fingerprint() -> Tuple:
@@ -110,6 +149,7 @@ class _BucketPlan:
     grid: Tuple[int, int]      # (p, q) tile grid
     nb: int
     dispatch_mode: Optional[str]
+    rung: str                  # ladder rung this plan executes at
     fn: object                 # jax compiled executable
 
 
@@ -147,24 +187,50 @@ class QRService:
                    engine's budget rule pick (megakernel when the shared
                    task table + batched working set fit).
     cache_size:    max resident compiled bucket plans (LRU).
+    admission:     input guard run at submit (None disables; default:
+                   finite 2-D float — :mod:`repro.robustness.guards`).
+    verify:        post-dispatch per-slice health checks — True/False
+                   force, None defers to ``$REPRO_VERIFY``.
+    escalate:      walk the degradation ladder on failures (False keeps
+                   the raise-through behavior; flush stays atomic).
+    breaker_threshold: escalations a bucket tolerates before its
+                   circuit breaker opens (plans evicted, bucket pinned
+                   to the lapack fallback until the tuning fingerprint
+                   changes).
     """
 
     def __init__(self, *, policy: Optional[BucketingPolicy] = None,
                  use_kernel: Optional[bool] = None,
                  dispatch_mode: Optional[str] = None,
                  interpret: Optional[bool] = None,
-                 cache_size: int = 32):
+                 cache_size: int = 32,
+                 admission: Optional[_guards.AdmissionPolicy] =
+                 _guards.DEFAULT_ADMISSION,
+                 verify: Optional[bool] = None,
+                 escalate: bool = True,
+                 breaker_threshold: int = 3):
         if cache_size < 1:
             raise ValueError(f"cache_size must be >= 1, got {cache_size}")
+        if breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {breaker_threshold}")
         self.policy = BucketingPolicy() if policy is None else policy
         self.use_kernel = (jax.default_backend() == "tpu"
                            if use_kernel is None else bool(use_kernel))
         self.dispatch_mode = dispatch_mode
         self.interpret = interpret
         self.cache_size = cache_size
-        self._plans: "collections.OrderedDict[Tuple[BucketKey, int], _BucketPlan]" \
+        self.admission = admission
+        self.verify = verify
+        self.escalate = escalate
+        self.breaker_threshold = breaker_threshold
+        self._plans: "collections.OrderedDict[Tuple[BucketKey, int, str], _BucketPlan]" \
             = collections.OrderedDict()
         self._pending: List[QRRequest] = []
+        self._quarantined: Dict[int, str] = {}    # rid -> named reason
+        self._esc_counts: Dict[BucketKey, int] = {}
+        self._breaker_open: Set[BucketKey] = set()
+        self.escalations: List[_escalate.Escalation] = []
         self._tuning_fp = _tuning_fingerprint()
         self._next_rid = 0
         # Counters live in the process-global metrics registry under this
@@ -183,12 +249,20 @@ class QRService:
         _metrics.histogram(f"serving.{name}", service=self._sid,
                            **labels).observe(value)
 
+    def _verify_on(self) -> bool:
+        return _verify.verify_enabled(self.verify)
+
     # ------------------------------------------------------------ intake
 
     def submit(self, a, mode: str = "reduced") -> int:
         """Queue one matrix; returns the request id :meth:`flush` keys
         results on.  The array is copied to host memory at submit time
-        (the service owns staging; donation consumes staged buffers)."""
+        (the service owns staging; donation consumes staged buffers).
+
+        Admission runs here — a payload the guard rejects is
+        quarantined (``flush()`` returns an error-carrying
+        :class:`QRResult` for it) rather than stacked into a bucket
+        where its NaNs would contaminate every bucket-mate."""
         arr = np.asarray(a)
         if arr.ndim != 2:
             raise ValueError(f"expected one matrix, got shape {arr.shape}")
@@ -197,9 +271,21 @@ class QRService:
                 f"serving modes are 'reduced' and 'r', got {mode!r}")
         rid = self._next_rid
         self._next_rid += 1
+        self._count("requests")
+        if _inject.enabled():
+            arr = _inject.corrupt_input(
+                arr, f"{arr.shape[0]}x{arr.shape[1]}")
+        if self.admission is not None:
+            try:
+                _guards.admit(arr, policy=self.admission)
+            except _guards.AdmissionError as e:
+                self._quarantined[rid] = e.reason
+                self._count("quarantined")
+                _metrics.counter("robustness.quarantined",
+                                 reason=e.reason).inc()
+                return rid
         self._pending.append(QRRequest(rid=rid, a=arr, mode=mode,
                                        t_submit=time.monotonic()))
-        self._count("requests")
         return rid
 
     def submit_many(self, arrays: Sequence, mode: str = "reduced"
@@ -214,63 +300,86 @@ class QRService:
 
     # --------------------------------------------------------- plan cache
 
-    def _plan_for(self, key: BucketKey, batch: int) -> _BucketPlan:
+    def _check_tuning(self) -> None:
+        """Tuning-cache refresh detection: every cached executable may
+        have been built under routing the new measurements contradict —
+        drop them all (they recompile lazily on next use).  An open
+        circuit breaker also resets: the new measurements may route the
+        bucket around whatever kept failing."""
         fp = _tuning_fingerprint()
-        if fp != self._tuning_fp:
-            # Tuning-cache refresh: every cached executable may have been
-            # built under routing the new measurements contradict — drop
-            # them all (they recompile lazily on next use).
-            self._tuning_fp = fp
-            if self._plans:
-                self._count("plan_invalidations")
-                self._count("cache_evictions", len(self._plans))
-                self._plans.clear()
-        cache_key = (key, batch)
+        if fp == self._tuning_fp:
+            return
+        self._tuning_fp = fp
+        if self._plans:
+            self._count("plan_invalidations")
+            self._count("cache_evictions", len(self._plans))
+            self._plans.clear()
+        if self._breaker_open or self._esc_counts:
+            self._count("breaker_resets", len(self._breaker_open) or 1)
+            self._breaker_open.clear()
+            self._esc_counts.clear()
+
+    def _initial_rung(self, key: BucketKey) -> str:
+        """The ladder rung a fresh bucket plan starts at: the tuned /
+        budget-resolved dispatch mode on the kernel path, "oracle" on
+        the jnp path."""
+        if not self.use_kernel:
+            return "oracle"
+        if self.dispatch_mode is not None:
+            return self.dispatch_mode
+        from repro.core import engine
+        from repro.tuning import cache as _tcache
+
+        nb = min(self.policy.tile, key.m, key.n)
+        p, q = -(-key.m // nb), -(-key.n // nb)
+        # Measured tuning entries (same pow2-ish shape classes as the
+        # bucket edges) take precedence over the engine's budget rule —
+        # this is what the fingerprint invalidation protects.
+        entry = _tcache.active_cache().lookup(
+            backend=jax.default_backend(), m=key.m, n=key.n,
+            dtype=np.dtype(key.dtype))
+        if (entry is not None and entry.best.use_kernel
+                and entry.best.dispatch_mode is not None):
+            return entry.best.dispatch_mode
+        return engine.resolve_dispatch_mode(
+            p, q, nb, np.dtype(key.dtype).itemsize)
+
+    def _plan_for(self, key: BucketKey, batch: int, *,
+                  rung: str) -> _BucketPlan:
+        self._check_tuning()
+        cache_key = (key, batch, rung)
         plan = self._plans.get(cache_key)
         if plan is not None:
             self._plans.move_to_end(cache_key)
             self._count("cache_hits")
             return plan
         self._count("cache_misses")
-        plan = self._build_plan(key, batch)
+        plan = self._build_plan(key, batch, rung=rung)
         self._plans[cache_key] = plan
         if len(self._plans) > self.cache_size:
             self._plans.popitem(last=False)
             self._count("cache_evictions")
         return plan
 
-    def _build_plan(self, key: BucketKey, batch: int) -> _BucketPlan:
-        """AOT-compile one bucket executable.  The ONLY site that
-        compiles — ``stats()["compiles"]`` counts exactly these, which is
-        what makes the steady-state zero-recompilation claim testable."""
-        from repro.core import engine
+    def _build_plan(self, key: BucketKey, batch: int, *,
+                    rung: str) -> _BucketPlan:
+        """AOT-compile one bucket executable at ``rung``.  The ONLY site
+        that compiles — ``stats()["compiles"]`` counts exactly these,
+        which is what makes the steady-state zero-recompilation claim
+        testable."""
         from repro.kernels import macro_ops
 
+        _inject.check("compile", f"{key.m}x{key.n}:{rung}")
+        use_kernel = rung in ("megakernel", "wavefront")
+        dispatch_mode = rung if use_kernel else None
         nb = min(self.policy.tile, key.m, key.n)
         p, q = -(-key.m // nb), -(-key.n // nb)
-        itemsize = np.dtype(key.dtype).itemsize
-        dispatch_mode = self.dispatch_mode
-        if self.use_kernel and dispatch_mode is None:
-            # Measured tuning entries (same pow2-ish shape classes as the
-            # bucket edges) take precedence over the engine's budget
-            # rule — this is what the fingerprint invalidation protects.
-            from repro.tuning import cache as _tcache
-
-            entry = _tcache.active_cache().lookup(
-                backend=jax.default_backend(), m=key.m, n=key.n,
-                dtype=np.dtype(key.dtype))
-            if (entry is not None and entry.best.use_kernel
-                    and entry.best.dispatch_mode is not None):
-                dispatch_mode = entry.best.dispatch_mode
-            else:
-                dispatch_mode = engine.resolve_dispatch_mode(p, q, nb,
-                                                             itemsize)
         interpret = (macro_ops.default_interpret()
                      if self.interpret is None else self.interpret)
         fn = jax.jit(
             functools.partial(
                 _solve_bucket, p=p, q=q, nb=nb, mode=key.mode,
-                use_kernel=self.use_kernel, interpret=interpret,
+                use_kernel=use_kernel, interpret=interpret,
                 dispatch_mode=dispatch_mode),
             donate_argnums=(0,))
         shape = jax.ShapeDtypeStruct((batch, key.m, key.n),
@@ -280,8 +389,88 @@ class QRService:
         self._count("compiles")
         self._observe("compile_seconds", time.monotonic() - t0)
         return _BucketPlan(key=key, batch=batch, grid=(p, q), nb=nb,
-                           dispatch_mode=dispatch_mode if self.use_kernel
-                           else None, fn=compiled)
+                           dispatch_mode=dispatch_mode, rung=rung,
+                           fn=compiled)
+
+    def _plan_with_escalation(
+            self, key: BucketKey, batch: int
+            ) -> Tuple[Optional[_BucketPlan], str]:
+        """Resolve a bucket's plan, walking the ladder on compile
+        failures.  Returns ``(plan, rung)``; ``plan=None`` means the
+        lapack rung (per-request fallback, nothing to compile)."""
+        if key in self._breaker_open:
+            self._count("breaker_pinned_dispatches")
+            return None, "lapack"
+        rung = self._initial_rung(key)
+        while True:
+            try:
+                return self._plan_for(key, batch, rung=rung), rung
+            except Exception as e:  # noqa: BLE001 — every rung failure degrades
+                if not self.escalate:
+                    raise
+                below = _escalate.ladder_below(rung)
+                nxt = below[0] if below else "lapack"
+                self._record_escalation(key, _escalate.record(
+                    rung, nxt, _escalate.classify(e, "compile"), str(e)))
+                if nxt == "lapack":
+                    return None, "lapack"
+                rung = nxt
+
+    # ------------------------------------------------- failure machinery
+
+    def _record_escalation(self, key: BucketKey,
+                           esc: _escalate.Escalation) -> None:
+        self.escalations.append(esc)
+        del self.escalations[:-200]            # bounded history
+        self._count("escalations")
+        self._esc_counts[key] = self._esc_counts.get(key, 0) + 1
+        if (self._esc_counts[key] >= self.breaker_threshold
+                and key not in self._breaker_open):
+            self._breaker_open.add(key)
+            self._count("breaker_trips")
+            _metrics.counter("robustness.breaker_open",
+                             bucket=f"{key.m}x{key.n}").inc()
+            stale = [ck for ck in self._plans if ck[0] == key]
+            for ck in stale:
+                del self._plans[ck]
+            if stale:
+                self._count("cache_evictions", len(stale))
+            self.escalations.append(_escalate.Escalation(
+                rung_from=esc.rung_to, rung_to="lapack",
+                rule="breaker_open",
+                reason=f"bucket {key.m}x{key.n} escalated "
+                       f"{self._esc_counts[key]} times "
+                       f"(threshold {self.breaker_threshold}); pinned to "
+                       f"lapack until the tuning fingerprint changes"))
+
+    def _recover_request(self, req: QRRequest, key: BucketKey,
+                         start: str) -> QRResult:
+        """Re-solve ONE request below ``start`` on its raw, unpadded
+        payload (the per-slice recovery path)."""
+        try:
+            q, r, rung, escs = _escalate.solve_below(
+                req.a, mode=key.mode, start=start,
+                verify=self._verify_on(), tag=f"{key.m}x{key.n}")
+        except _escalate.EscalationExhausted as e:
+            for esc in e.escalations:
+                self._record_escalation(key, esc)
+            return QRResult(rid=req.rid, q=None, r=None,
+                            error="escalation_exhausted")
+        for esc in escs:
+            self._record_escalation(key, esc)
+        return QRResult(rid=req.rid, q=None if key.mode == "r" else q,
+                        r=r)
+
+    def _lapack_chunk(self, key: BucketKey, chunk: List[QRRequest]
+                      ) -> Dict[int, QRResult]:
+        """The breaker-pinned / bottom-rung chunk path: per-request
+        ``jnp.linalg.qr`` on the raw payloads — no padding, no
+        compiled plan, nothing left to fail but the input itself."""
+        out: Dict[int, QRResult] = {}
+        for req in chunk:
+            q, r = _escalate.lapack_qr(req.a, key.mode)
+            out[req.rid] = QRResult(rid=req.rid, q=q, r=r)
+        return out
 
     # ---------------------------------------------------------- execution
 
@@ -315,26 +504,76 @@ class QRService:
         buffer is already staging host->device; each staged buffer is
         donated into its executable (compiled with ``donate_argnums``),
         so steady state holds one in-flight compute and one in-flight
-        transfer, not a growing buffer population."""
+        transfer, not a growing buffer population.  Health checks and
+        escalations happen at sync time, after every dispatch has been
+        issued — a failing slice never stalls the healthy pipeline.
+
+        Failure-atomic: if an exception escapes (escalation disabled or
+        non-recoverable), every request not yet resolved to a result is
+        restored to the pending queue before the exception propagates."""
+        self._check_tuning()
         with _trace.span("serving.bucketize", service=self._sid):
             work = self._chunks()
-        if not work:
-            return {}
+        results: Dict[int, QRResult] = {}
+        try:
+            if work:
+                self._flush_work(work, results)
+        except BaseException:
+            done = set(results)
+            self._pending = [req for _, chunk in work for req in chunk
+                             if req.rid not in done] + self._pending
+            raise
+        for rid, reason in self._quarantined.items():
+            results[rid] = QRResult(rid=rid, q=None, r=None,
+                                    error=f"quarantined:{reason}")
+        self._quarantined.clear()
+        return results
+
+    def _flush_work(self, work, results: Dict[int, QRResult]) -> None:
         with _trace.span("serving.plan", service=self._sid,
                          chunks=len(work)):
-            plans = [self._plan_for(
+            planned = [self._plan_with_escalation(
                 key, pad_batch(len(chunk), max_batch=self.policy.max_batch))
                 for key, chunk in work]
-        staged = self._stage(work[0][0], work[0][1], plans[0].batch)
-        outs = []
-        for i, (plan, (key, chunk)) in enumerate(zip(plans, work)):
-            nxt = (self._stage(work[i + 1][0], work[i + 1][1],
-                               plans[i + 1].batch)
-                   if i + 1 < len(work) else None)
+        verify_on = self._verify_on()
+        kernel_chunks = [i for i, (plan, _) in enumerate(planned)
+                        if plan is not None]
+        staged: Dict[int, Array] = {}
+        if kernel_chunks:
+            i0 = kernel_chunks[0]
+            staged[i0] = self._stage(work[i0][0], work[i0][1],
+                                     planned[i0][0].batch)
+        outs: Dict[int, object] = {}
+        for pos, i in enumerate(kernel_chunks):
+            plan, rung = planned[i]
+            key, chunk = work[i]
+            if pos + 1 < len(kernel_chunks):
+                j = kernel_chunks[pos + 1]
+                staged[j] = self._stage(work[j][0], work[j][1],
+                                        planned[j][0].batch)
+            tag = f"{key.m}x{key.n}:{rung}"
             with _trace.span("serving.dispatch", service=self._sid,
                              bucket=f"{key.m}x{key.n}", batch=plan.batch,
-                             fill=len(chunk)):
-                outs.append(plan.fn(staged))  # async; donates staged buffer
+                             fill=len(chunk), rung=rung):
+                try:
+                    _inject.sleep(tag)
+                    _inject.check("dispatch", tag)
+                    out = plan.fn(staged.pop(i))  # async; donates buffer
+                    outs[i] = _inject.corrupt_output(out, tag)
+                except Exception as e:  # noqa: BLE001
+                    if not self.escalate:
+                        raise
+                    # Dispatch raised before results existed: the whole
+                    # chunk recovers per request below this rung.
+                    self._record_escalation(key, _escalate.record(
+                        rung, "per-request", _escalate.classify(
+                            e, "dispatch"), str(e)))
+                    staged.pop(i, None)
+                    for req in chunk:
+                        results[req.rid] = self._recover_request(
+                            req, key, rung)
+                    planned[i] = (None, "recovered")
+                    continue
             self._count("dispatches")
             self._count("matrices_served", len(chunk))
             self._count("padded_slots", plan.batch - len(chunk))
@@ -345,30 +584,91 @@ class QRService:
             real = sum(m * n for m, n in (r.shape for r in chunk))
             waste = 1.0 - real / (plan.batch * key.m * key.n)
             self._observe("padding_waste", waste, bucket=f"{key.m}x{key.n}")
-            staged = nxt
-        results: Dict[int, QRResult] = {}
         with _trace.span("serving.unpad", service=self._sid) as sp:
-            for (key, chunk), out in zip(work, outs):
-                sp.sync(out)
+            for i, (key, chunk) in enumerate(work):
+                plan, rung = planned[i]
+                if rung == "recovered":
+                    continue
+                if plan is None:               # breaker-pinned / lapack
+                    results.update(self._lapack_chunk(key, chunk))
+                    self._count("dispatches")
+                    self._count("matrices_served", len(chunk))
+                    continue
+                out = outs[i]
+                try:
+                    sp.sync(out)
+                except Exception as e:  # noqa: BLE001 — deferred runtime error
+                    if not self.escalate:
+                        raise
+                    self._record_escalation(key, _escalate.record(
+                        rung, "per-request",
+                        _escalate.classify(e, "dispatch"), str(e)))
+                    for req in chunk:
+                        results[req.rid] = self._recover_request(
+                            req, key, rung)
+                    continue
+                bad: Set[int] = set()
+                if verify_on:
+                    bad = self._verify_chunk(key, chunk, out, rung)
                 now = time.monotonic()
                 for s, req in enumerate(chunk):
+                    if s in bad:
+                        results[req.rid] = self._recover_request(
+                            req, key, rung)
+                        continue
                     m, n = req.shape
                     k = min(m, n)
                     if key.mode == "r":
                         q_mat, r_mat = None, out[0][s, :k, :n]
                     else:
                         q_mat, r_mat = out[0][s, :m, :k], out[1][s, :k, :n]
-                    results[req.rid] = QRResult(rid=req.rid, q=q_mat, r=r_mat)
+                    results[req.rid] = QRResult(rid=req.rid, q=q_mat,
+                                                r=r_mat)
                     self._observe("latency_seconds", now - req.t_submit)
-        return results
+
+    def _verify_chunk(self, key: BucketKey, chunk: List[QRRequest],
+                      out, rung: str) -> Set[int]:
+        """Per-slice health check of one synced bucket: ONE vmapped
+        stats program over the padded stack, host-side verdicts.  A
+        failing slice is recorded (and escalated by the caller) alone —
+        its bucket-mates are unaffected."""
+        a_stack = np.zeros((out[0].shape[0], key.m, key.n),
+                           np.dtype(key.dtype))
+        for s, req in enumerate(chunk):
+            m, n = req.shape
+            a_stack[s, :m, :n] = req.a
+        kp = min(key.m, key.n)   # factors come back fully padded
+        with _trace.span("serving.verify", service=self._sid,
+                         bucket=f"{key.m}x{key.n}"):
+            if key.mode == "r":
+                reports = _verify.check_batch(
+                    a_stack, None, out[0][:, :kp, :key.n])
+            else:
+                reports = _verify.check_batch(
+                    a_stack, out[0][:, :, :kp], out[1][:, :kp, :key.n])
+        bad: Set[int] = set()
+        for s in range(len(chunk)):
+            rep = reports[s]
+            if rep.ok:
+                continue
+            bad.add(s)
+            self._count("health_check_failures")
+            self._record_escalation(key, _escalate.record(
+                rung, "per-request", "health_check_failed",
+                f"slice {s} ({chunk[s].shape[0]}x{chunk[s].shape[1]}): "
+                f"{rep.reason} residual={rep.residual:.3e} "
+                f"defect={rep.ortho_defect:.3e} tol={rep.tol:.3e}"))
+        return bad
 
     # -------------------------------------------------------------- stats
 
     def stats(self) -> Dict[str, object]:
         """Serving counters: cache behavior, dispatch economy, padding
-        waste.  ``bucket_fill_ratio`` is matrices served over batch slots
-        dispatched (1.0 = every slot carried a real request);
-        ``cache_hit_rate`` is plan-cache hits over lookups.
+        waste, failure hardening.  ``bucket_fill_ratio`` is matrices
+        served over batch slots dispatched (1.0 = every slot carried a
+        real request); ``cache_hit_rate`` is plan-cache hits over
+        lookups; ``breaker_open`` counts buckets currently pinned to the
+        fallback path.
 
         Counters are a view over this instance's ``serving.*`` series in
         the process-global metrics registry (``service=<id>`` label)."""
@@ -390,4 +690,10 @@ class QRService:
             padded_slots=padded,
             bucket_fill_ratio=(served / slots) if slots else 1.0,
             cache_hit_rate=(hits / lookups) if lookups else 0.0,
+            quarantined=self._count_value("quarantined"),
+            escalations=self._count_value("escalations"),
+            health_check_failures=self._count_value(
+                "health_check_failures"),
+            breaker_trips=self._count_value("breaker_trips"),
+            breaker_open=len(self._breaker_open),
         )

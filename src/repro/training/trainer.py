@@ -43,6 +43,7 @@ class Trainer:
     def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig,
                  run_cfg: RunConfig, data_cfg: DataConfig, *,
                  mesh=None, rules: Optional[MeshRules] = None,
+                 watchdog: Optional[StepWatchdog] = None,
                  log_fn: Callable[[str], None] = print):
         self.model_cfg = model_cfg
         self.train_cfg = train_cfg
@@ -51,7 +52,9 @@ class Trainer:
         self.mesh = mesh
         self.rules = rules
         self.log = log_fn
-        self.watchdog = StepWatchdog(
+        # An injected watchdog (custom threshold/window/callback — e.g.
+        # examples/train_lm.py --fault-tolerance) replaces the default.
+        self.watchdog = watchdog if watchdog is not None else StepWatchdog(
             on_straggler=lambda s, dt, med: log_fn(
                 f"[watchdog] straggler step {s}: {dt:.2f}s vs median {med:.2f}s"))
         self.ckpt = (CheckpointManager(run_cfg.checkpoint_dir)
